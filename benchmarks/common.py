@@ -1,0 +1,68 @@
+"""Shared benchmark utilities: timing (paper methodology: best of N),
+structural metrics for Pallas rungs on this CPU-only host, table printing."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "bench")
+
+HBM_BW = 819e9
+PEAK_FLOPS = 197e12
+VPU_FLOPS = 197e12 / 8  # rough VPU (non-MXU elementwise) ceiling
+
+
+def best_of(fn, *args, n: int = 3, warmup: int = 1):
+    """Paper methodology: several runs, shortest time (jit-warm first)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def kernel_structure(vc, img_shape, *, halo: int, widen: bool, extra_bytes_per_step: int = 0):
+    """Structural metrics of a band kernel at a given block width (the
+    TPU-side evidence for the paper's claim: wider blocks => fewer grid
+    steps / DMA issues, larger VMEM working set)."""
+    H, W = img_shape[:2]
+    rows = vc.rows(jnp.uint8)
+    wp = W + 2 * halo
+    wp += (-wp) % vc.lane
+    n_bands = -(-H // rows)
+    in_bytes = 3 * rows * wp                     # u8 bands
+    acc_bytes = (rows + 2 * halo) * wp * (4 if widen else 1) + rows * wp * (4 if widen else 1)
+    vmem = 2 * (in_bytes + acc_bytes) + extra_bytes_per_step   # double-buffered
+    hbm = H * wp + H * wp                        # read + write once (u8)
+    return {
+        "lmul": vc.lmul,
+        "grid_steps": n_bands,
+        "vmem_bytes": vmem,
+        "vmem_ok": vmem <= vc.vmem_budget,
+        "dma_per_step_bytes": in_bytes,
+        "est_hbm_s": hbm / HBM_BW,
+    }
+
+
+def save_json(name: str, obj):
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, f"{name}.json"), "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+
+
+def print_table(title: str, headers: list[str], rows: list[list]):
+    print(f"\n### {title}\n")
+    widths = [max(len(str(h)), max((len(str(r[i])) for r in rows), default=0))
+              for i, h in enumerate(headers)]
+    line = " | ".join(str(h).ljust(w) for h, w in zip(headers, widths))
+    print(line)
+    print("-+-".join("-" * w for w in widths))
+    for r in rows:
+        print(" | ".join(str(c).ljust(w) for c, w in zip(r, widths)))

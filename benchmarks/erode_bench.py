@@ -1,0 +1,53 @@
+"""Paper Tables 4–6: erosion across resolutions x filter half-sizes.
+
+Ladder: SeqScalar (jnp direct, wall-clock), VanHerk (beyond-paper O(1)/px,
+wall-clock — the algorithmic win), Pallas lmul 1 vs 4 (structural).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.autotune import erode_working_set, pick_lmul
+from repro.core.vector import VectorConfig
+from repro.cv import imgproc
+from repro.data.synthetic import ImageStream
+from repro.kernels import ops, ref
+
+from .common import best_of, kernel_structure, print_table, save_json
+
+RESOLUTIONS = [(1080, 1920), (2160, 3840), (4320, 7680), (8640, 15260)]
+SIZES = [1, 2, 3]          # the paper's filter half-sizes
+SIZES_BEYOND = [7, 15]     # beyond-paper: where O(1)/px van Herk crosses over
+
+
+def run(*, quick: bool = False):
+    stream = ImageStream()
+    rows = []
+    resolutions = RESOLUTIONS[:2] if quick else RESOLUTIONS
+    for (h, w) in resolutions:
+        img = stream.image((h, w))
+        sizes = SIZES + ([] if (quick or h > 2160) else SIZES_BEYOND)
+        for r in sizes:
+            t_scalar = best_of(lambda im: ref.erode_ref(im, r), img)
+            t_vh = best_of(lambda im: imgproc.erode_vanherk(im, r), img)
+            if (h, r) == (1080, 2):
+                small = img[:256, :512]
+                a = ops.erode(small, r, vc=VectorConfig(lmul=1))
+                b = ops.erode(small, r, vc=VectorConfig(lmul=4))
+                assert (a == ref.erode_ref(small, r)).all() and (a == b).all()
+            s1 = kernel_structure(VectorConfig(lmul=1), (h, w), halo=r, widen=False)
+            s4 = kernel_structure(VectorConfig(lmul=4), (h, w), halo=r, widen=False)
+            tuned = pick_lmul(erode_working_set(w, r))
+            rows.append({
+                "resolution": f"{w}x{h}", "size": r,
+                "SeqScalar_s": round(t_scalar, 4), "VanHerk_s": round(t_vh, 4),
+                "vh_speedup": round(t_scalar / t_vh, 2),
+                "grid_steps_m1": s1["grid_steps"], "grid_steps_m4": s4["grid_steps"],
+                "vmem_m4_KiB": s4["vmem_bytes"] // 1024,
+                "auto_lmul": tuned.lmul,
+                "est_hbm_s": round(s4["est_hbm_s"], 5),
+            })
+    print_table("Paper T4-6: erosion", list(rows[0].keys()),
+                [list(r.values()) for r in rows])
+    save_json("erode", rows)
+    return rows

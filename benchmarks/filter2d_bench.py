@@ -1,0 +1,64 @@
+"""Paper Tables 1–3: Gaussian filter2D across resolutions x kernel sizes.
+
+Ladder mapping on this CPU-only host (DESIGN.md §7):
+  SeqScalar  — pure-jnp direct convolution compiled by XLA (wall-clock).
+  SepFused   — beyond-paper separable factorization (wall-clock; the
+               algorithmic analogue of the 9x–11x x86 vectorization wins).
+  SeqVector  — Pallas kernel, lmul=1 (structural metrics; interpret-checked).
+  Optim      — Pallas kernel, lmul=4 (the paper's wide-register rung).
+
+Structural columns show what the paper's optimization changes on TPU:
+grid steps (loop-control/decode analogue) drop by lmul; VMEM working set
+grows until the autotune (m8-analogue) ceiling.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.autotune import filter2d_working_set, pick_lmul
+from repro.core.vector import VectorConfig
+from repro.data.synthetic import ImageStream
+from repro.kernels import ops, ref
+
+from .common import best_of, kernel_structure, print_table, save_json
+
+RESOLUTIONS = [(1080, 1920), (2160, 3840)]
+KSIZES = [3, 5, 7, 9, 11, 13]
+
+
+def run(*, quick: bool = False):
+    stream = ImageStream()
+    rows = []
+    resolutions = RESOLUTIONS[:1] if quick else RESOLUTIONS
+    ksizes = KSIZES[:3] if quick else KSIZES
+    for (h, w) in resolutions:
+        img = stream.image((h, w))
+        for k in ksizes:
+            k1 = ref.gaussian_kernel1d(k)
+            k2 = jnp.outer(k1, k1)
+            t_scalar = best_of(lambda im: ref.filter2d_ref(im, k2), img)
+            t_sep = best_of(lambda im: ref.sep_filter2d_ref(im, k1, k1), img)
+            # correctness of kernels at both rungs (quick shapes only)
+            if quick or (h, k) == (1080, 5):
+                small = img[:256, :512]
+                a = ops.filter2d(small, k2, vc=VectorConfig(lmul=1))
+                b = ops.filter2d(small, k2, vc=VectorConfig(lmul=4))
+                wref = ref.filter2d_ref(small, k2)
+                assert int(jnp.max(jnp.abs(a.astype(int) - wref.astype(int)))) <= 1
+                assert (a == b).all()
+            s1 = kernel_structure(VectorConfig(lmul=1), (h, w), halo=k // 2, widen=True)
+            s4 = kernel_structure(VectorConfig(lmul=4), (h, w), halo=k // 2, widen=True)
+            tuned = pick_lmul(filter2d_working_set(w, k))
+            rows.append({
+                "resolution": f"{w}x{h}", "kernel": f"{k}x{k}",
+                "SeqScalar_s": round(t_scalar, 4), "SepFused_s": round(t_sep, 4),
+                "sep_speedup": round(t_scalar / t_sep, 2),
+                "grid_steps_m1": s1["grid_steps"], "grid_steps_m4": s4["grid_steps"],
+                "vmem_m4_KiB": s4["vmem_bytes"] // 1024,
+                "auto_lmul": tuned.lmul,
+                "est_hbm_s": round(s4["est_hbm_s"], 5),
+            })
+    print_table("Paper T1-3: filter2D (Gaussian)",
+                list(rows[0].keys()), [list(r.values()) for r in rows])
+    save_json("filter2d", rows)
+    return rows

@@ -1,0 +1,39 @@
+"""Block-width (lmul) ladder per kernel — the paper's core experiment in
+TPU-structural form: grid steps vs VMEM working set vs the autotune ceiling,
+for each Pallas kernel in the library.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.autotune import erode_working_set, filter2d_working_set, pick_lmul
+from repro.core.vector import VectorConfig
+
+from .common import kernel_structure, print_table, save_json
+
+
+def run(*, quick: bool = False):
+    rows = []
+    cases = [
+        ("filter2d 1080p k=5 (u8->f32 widened)", (1080, 1920), 2, True),
+        ("filter2d 4K k=13 (u8->f32 widened)", (2160, 3840), 6, True),
+        ("erode 4K r=3 (u8 native)", (2160, 3840), 3, False),
+        ("erode 8K r=3 (u8 native)", (4320, 7680), 3, False),
+    ]
+    for name, shape, halo, widen in cases:
+        for lmul in (1, 2, 4, 8):
+            s = kernel_structure(VectorConfig(lmul=lmul), shape, halo=halo, widen=widen)
+            rows.append({"kernel": name, "lmul": lmul,
+                         "grid_steps": s["grid_steps"],
+                         "vmem_KiB": s["vmem_bytes"] // 1024,
+                         "fits_vmem": s["vmem_ok"],
+                         "dma_per_step_KiB": s["dma_per_step_bytes"] // 1024})
+        ws = (filter2d_working_set(shape[1], 2 * halo + 1) if widen
+              else erode_working_set(shape[1], halo))
+        rows.append({"kernel": name, "lmul": f"auto={pick_lmul(ws).lmul}",
+                     "grid_steps": "", "vmem_KiB": "", "fits_vmem": "",
+                     "dma_per_step_KiB": ""})
+    print_table("Block-width (lmul) ladder — paper's m1->m4 on TPU tiles",
+                list(rows[0].keys()), [list(r.values()) for r in rows])
+    save_json("lmul", rows)
+    return rows

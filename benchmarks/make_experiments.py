@@ -1,0 +1,88 @@
+"""Splice the generated roofline + dry-run tables into EXPERIMENTS.md
+(between the <!-- ROOFLINE_TABLE --> / <!-- DRYRUN_TABLE --> markers).
+
+    PYTHONPATH=src python -m benchmarks.make_experiments
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.roofline import analyze  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def dryrun_summary(rows) -> str:
+    ok = [r for r in rows if r["status"] == "ok"]
+    skip = [r for r in rows if r["status"] != "ok"]
+    lines = [f"Summary: **{len(ok)} compiled ok, {len(skip)} documented skips** "
+             f"across {len(set((r['arch'], r['shape']) for r in rows))} cells x 2 meshes.",
+             "",
+             "| arch | shape | mesh | compile s | args GiB/dev | temp GiB/dev | "
+             "params | active |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in ok:
+        mem = r.get("mem_gib", {})
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('compile_s', 0):.0f} | "
+            f"{mem.get('argument_size_in_bytes', 0):.2f} | "
+            f"{mem.get('temp_size_in_bytes', 0):.2f} | "
+            f"{(r.get('params_total') or 0)/1e9:.1f}B | {(r.get('params_active') or 0)/1e9:.1f}B |")
+    return "\n".join(lines)
+
+
+def roofline_md(rows) -> str:
+    out = []
+    for mesh in ("16x16", "2x16x16"):
+        out.append(f"\n#### Mesh {mesh}\n")
+        hdr = ("| arch | shape | t_comp | t_mem | t_mem_flash | t_coll | bottleneck | "
+               "useful | MFU | MFU(flash) | tok/s |\n"
+               "|---|---|---|---|---|---|---|---|---|---|---|")
+        body = []
+        for r in rows:
+            if r["mesh"] != mesh:
+                continue
+            if r["status"] != "ok":
+                body.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                            f"skip | — | — | — | — |")
+                continue
+            body.append(
+                f"| {r['arch']} | {r['shape']} | {analyze.fmt_time(r['t_compute'])} | "
+                f"{analyze.fmt_time(r['t_memory'])} | "
+                f"{analyze.fmt_time(r.get('t_memory_flash', r['t_memory']))} | "
+                f"{analyze.fmt_time(r['t_collective'])} | {r['dominant']} | "
+                f"{r['useful_ratio']:.2f} | {r['est_mfu']*100:.1f}% | "
+                f"{r.get('est_mfu_flash', 0)*100:.1f}% | "
+                f"{r.get('est_tokens_per_s', 0):,.0f} |")
+        out.append(hdr + "\n" + "\n".join(body))
+    return "\n".join(out)
+
+
+def splice(text: str, marker: str, content: str) -> str:
+    tag = f"<!-- {marker} -->"
+    begin = f"<!-- {marker}_BEGIN -->"
+    end = f"<!-- {marker}_END -->"
+    block = f"{begin}\n{content}\n{end}"
+    if begin in text:
+        pre = text.split(begin)[0]
+        post = text.split(end)[1]
+        return pre + block + post
+    return text.replace(tag, block)
+
+
+def main():
+    rows = analyze.load_all()
+    exp_path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(exp_path).read()
+    text = splice(text, "DRYRUN_TABLE", dryrun_summary(rows))
+    text = splice(text, "ROOFLINE_TABLE", roofline_md(rows))
+    open(exp_path, "w").write(text)
+    print(f"EXPERIMENTS.md updated with {len(rows)} cells")
+
+
+if __name__ == "__main__":
+    main()

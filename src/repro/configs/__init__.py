@@ -1,0 +1,1 @@
+from .registry import ARCHS, get_config, reduced_config, extra_inputs  # noqa: F401

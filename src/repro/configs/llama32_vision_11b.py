@@ -1,0 +1,22 @@
+"""Llama-3.2-Vision-11B [hf:meta-llama/Llama-3.2-11B-Vision]: 40L total,
+d=4096, 32 heads (GQA kv=8) head_dim 128, d_ff=14336 SwiGLU, vocab 128256;
+every 5th layer is a gated cross-attention layer over precomputed image
+patch embeddings (vision frontend is a stub per the assignment)."""
+from repro.models.config import ModelConfig
+from repro.configs.gemma_7b import FULL_ATTN_SKIP
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-11b", family="vlm", n_layers=40, d_model=4096,
+        n_heads=32, n_kv_heads=8, head_dim=128, d_ff=14336, vocab_size=128256,
+        blocks=(("attn", 3), ("xattn", 1)) * 8,
+        act="silu", mlp_style="glu", rope_theta=500000.0,
+        n_image_tokens=1600, skip_shapes=FULL_ATTN_SKIP,
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                            d_ff=128, vocab_size=512, blocks=(("attn", 1), ("xattn", 1)) * 2,
+                            n_image_tokens=16, fsdp=False, remat=False)

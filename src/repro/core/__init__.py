@@ -1,0 +1,2 @@
+from .vector import VectorConfig, SEQ_VECTOR, OPTIM, DEFAULT  # noqa: F401
+from . import autotune, uintr  # noqa: F401

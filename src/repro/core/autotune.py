@@ -1,0 +1,70 @@
+"""Block-width (lmul) selection — the paper's m8 ceiling as a VMEM rule.
+
+The paper fixes m4 because widened (extended-precision) intermediates
+occupy 2x the registers and m8 is the ISA maximum. The TPU analogue:
+a kernel declares its working set as a function of the tile size (input
+tiles, widened accumulators, halos); we pick the largest lmul whose total
+fits the VMEM budget, with double-buffering headroom.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+
+from .vector import VectorConfig
+
+LMULS = (8, 4, 2, 1)
+
+
+@dataclass(frozen=True)
+class WorkingSet:
+    """Bytes used per grid step as a function of the config."""
+    fn: Callable[[VectorConfig], int]
+    double_buffer: bool = True       # Pallas pipelines HBM->VMEM copies
+
+    def bytes(self, vc: VectorConfig) -> int:
+        b = self.fn(vc)
+        return 2 * b if self.double_buffer else b
+
+
+def pick_lmul(ws: WorkingSet, *, base: VectorConfig | None = None) -> VectorConfig:
+    """Largest lmul whose (double-buffered, widened) working set fits VMEM."""
+    vc = base or VectorConfig()
+    for l in LMULS:
+        cand = vc.with_lmul(l)
+        if ws.bytes(cand) <= cand.vmem_budget:
+            return cand
+    return vc.with_lmul(1)
+
+
+def _round_lane(vc: VectorConfig, width: int, halo: int) -> int:
+    wp = width + 2 * halo
+    return wp + (-wp) % vc.lane
+
+
+def filter2d_working_set(width: int, ksize: int, in_dtype=jnp.uint8) -> WorkingSet:
+    """Band kernel: 3 input bands (in_dtype) + widened f32 band w/ halo +
+    f32 accumulator rows — mirrors kernels/filter2d.py exactly."""
+    halo = ksize // 2
+
+    def fn(vc: VectorConfig) -> int:
+        rows = vc.rows(in_dtype)             # band rows per grid step
+        wp = _round_lane(vc, width, halo)
+        in_bytes = 3 * rows * wp * jnp.dtype(in_dtype).itemsize
+        acc_bytes = (rows + 2 * halo) * wp * 4 + rows * wp * 4
+        return in_bytes + acc_bytes
+    return WorkingSet(fn)
+
+
+def erode_working_set(width: int, ksize: int, in_dtype=jnp.uint8) -> WorkingSet:
+    """No widening: min/max closed over u8 — mirrors kernels/erode.py."""
+    halo = ksize
+
+    def fn(vc: VectorConfig) -> int:
+        rows = vc.rows(in_dtype)
+        wp = _round_lane(vc, width, halo)
+        itemsize = jnp.dtype(in_dtype).itemsize
+        return (3 * rows + (rows + 2 * halo) + rows) * wp * itemsize
+    return WorkingSet(fn)

@@ -1,0 +1,1 @@
+from . import bow, features, imgproc, pipeline, svm  # noqa: F401

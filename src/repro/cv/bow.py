@@ -1,0 +1,69 @@
+"""Bag-of-visual-words: k-means dictionary + normalized word histograms.
+
+Training-stage step 3/4 and testing-stage step 2 of the paper's §4.5
+pipeline. Assignment runs on the fused Pallas kernel (repro.kernels.bow).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vector import VectorConfig, DEFAULT
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(key, desc: Array, weights: Array, *, k: int = 250, iters: int = 20):
+    """Lloyd's k-means over descriptors (N, D) with sample weights (N,).
+
+    Returns centroids (k, D). Empty clusters are re-seeded from the data.
+    """
+    N, D = desc.shape
+    init_idx = jax.random.choice(key, N, (k,), replace=False, p=weights / jnp.sum(weights))
+    cents = desc[init_idx]
+
+    def step(cents, _):
+        idx, _ = kref.bow_assign_ref(desc, cents)
+        oh = jax.nn.one_hot(idx, k, dtype=jnp.float32) * weights[:, None]
+        counts = jnp.sum(oh, axis=0)
+        sums = oh.T @ desc
+        new = sums / jnp.maximum(counts[:, None], 1e-6)
+        new = jnp.where(counts[:, None] > 0, new, cents)
+        return new, counts
+
+    cents, _ = jax.lax.scan(step, cents, None, length=iters)
+    return cents
+
+
+def histogram(desc: Array, valid: Array, centroids: Array, *,
+              vc: VectorConfig = DEFAULT, use_kernel: bool = True) -> Array:
+    """Per-image normalized word histogram. desc (N, D), valid (N,) bool."""
+    K = centroids.shape[0]
+    if use_kernel:
+        idx, _ = kops.bow_assign(desc, centroids, vc=vc)
+    else:
+        idx, _ = kref.bow_assign_ref(desc, centroids)
+    w = valid.astype(jnp.float32)
+    h = jnp.zeros((K,), jnp.float32).at[idx].add(w)
+    return h / jnp.maximum(jnp.sum(h), 1e-6)
+
+
+def batch_histograms(descs: Array, valids: Array, centroids: Array, *,
+                     vc: VectorConfig = DEFAULT, use_kernel: bool = True) -> Array:
+    """descs (B, N, D) -> (B, K)."""
+    B, N, D = descs.shape
+    K = centroids.shape[0]
+    if use_kernel:
+        idx, _ = kops.bow_assign(descs.reshape(B * N, D), centroids, vc=vc)
+    else:
+        idx, _ = kref.bow_assign_ref(descs.reshape(B * N, D), centroids)
+    idx = idx.reshape(B, N)
+    w = valids.astype(jnp.float32)
+    h = jnp.zeros((B, K), jnp.float32)
+    h = h.at[jnp.arange(B)[:, None], idx].add(w)
+    return h / jnp.maximum(jnp.sum(h, axis=1, keepdims=True), 1e-6)

@@ -1,0 +1,134 @@
+"""SIFT-lite: DoG keypoint detection + 128-d gradient-histogram descriptors.
+
+Faithful-but-reduced SIFT (Lowe, IJCV 2004) in pure JAX: Gaussian scale
+pyramid -> difference-of-Gaussians -> 3x3x3 local extrema with contrast and
+edge-response tests -> fixed-size descriptor grid (4x4 cells x 8 bins)
+around each keypoint. Orientation assignment uses the dominant gradient
+bin (single orientation per keypoint; no subpixel refinement — DESIGN §7).
+
+JAX shape discipline: keypoint sets are fixed-capacity (top-N by response,
+padded with validity mask) so the whole pipeline jits.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import imgproc
+
+Array = jax.Array
+
+
+def gradients(img: Array) -> tuple[Array, Array]:
+    """Central-difference magnitude/orientation (H, W) f32."""
+    x = img.astype(jnp.float32)
+    dx = jnp.pad(x[:, 2:] - x[:, :-2], ((0, 0), (1, 1))) * 0.5
+    dy = jnp.pad(x[2:, :] - x[:-2, :], ((1, 1), (0, 0))) * 0.5
+    mag = jnp.sqrt(dx * dx + dy * dy)
+    ang = jnp.arctan2(dy, dx)  # [-pi, pi]
+    return mag, ang
+
+
+@functools.partial(jax.jit, static_argnames=("n_scales", "max_kp"))
+def detect_keypoints(img: Array, *, n_scales: int = 4, max_kp: int = 64,
+                     contrast_thresh: float = 0.02, edge_thresh: float = 10.0):
+    """Single-octave DoG detector.
+
+    Returns dict: xy (max_kp, 2) f32, scale (max_kp,) i32, resp (max_kp,),
+    valid (max_kp,) bool.
+    """
+    g = img.astype(jnp.float32)
+    if g.ndim == 3:
+        g = imgproc.rgb_to_gray(g).astype(jnp.float32)
+    g = g / jnp.maximum(jnp.max(g), 1e-6)
+    H, W = g.shape
+
+    sigmas = [1.6 * (2 ** (i / n_scales)) for i in range(n_scales + 3)]
+    pyr = []
+    for s in sigmas:
+        k = int(2 * round(3 * s) + 1)
+        pyr.append(imgproc.gaussian_blur(g, min(k, 15), s, vc=imgproc.DEFAULT).astype(jnp.float32))
+    dogs = jnp.stack([pyr[i + 1] - pyr[i] for i in range(len(pyr) - 1)])  # (S+2, H, W)
+
+    mid = dogs[1:-1]                                            # (S, H, W)
+    # 3x3x3 neighborhood extrema
+    def shift2(a, di, dj):
+        return jnp.roll(jnp.roll(a, di, axis=1), dj, axis=2)
+    neigh_max = jnp.full_like(mid, -jnp.inf)
+    neigh_min = jnp.full_like(mid, jnp.inf)
+    for ds in (-1, 0, 1):
+        lvl = dogs[1 + ds: dogs.shape[0] - 1 + ds]
+        for di in (-1, 0, 1):
+            for dj in (-1, 0, 1):
+                if ds == 0 and di == 0 and dj == 0:
+                    continue
+                v = shift2(lvl, di, dj)
+                neigh_max = jnp.maximum(neigh_max, v)
+                neigh_min = jnp.minimum(neigh_min, v)
+    is_ext = ((mid > neigh_max) & (mid > contrast_thresh)) | \
+             ((mid < neigh_min) & (mid < -contrast_thresh))
+
+    # Harris-style edge rejection on the DoG
+    dxx = shift2(mid, 0, 1) + shift2(mid, 0, -1) - 2 * mid
+    dyy = shift2(mid, 1, 0) + shift2(mid, -1, 0) - 2 * mid
+    dxy = 0.25 * (shift2(mid, 1, 1) + shift2(mid, -1, -1) - shift2(mid, 1, -1) - shift2(mid, -1, 1))
+    tr, det = dxx + dyy, dxx * dyy - dxy * dxy
+    r = edge_thresh
+    edge_ok = (det > 0) & (tr * tr * r < (r + 1) ** 2 * det)
+    border = 8
+    ii = jnp.arange(H)[None, :, None]
+    jj = jnp.arange(W)[None, None, :]
+    in_border = (ii >= border) & (ii < H - border) & (jj >= border) & (jj < W - border)
+    score = jnp.where(is_ext & edge_ok & in_border, jnp.abs(mid), 0.0)
+
+    flat = score.reshape(-1)
+    resp, idx = jax.lax.top_k(flat, max_kp)
+    s_idx = idx // (H * W)
+    rem = idx % (H * W)
+    yy, xx = rem // W, rem % W
+    return {"xy": jnp.stack([xx, yy], axis=1).astype(jnp.float32),
+            "scale": s_idx.astype(jnp.int32),
+            "resp": resp,
+            "valid": resp > 0.0,
+            "gray": g}
+
+
+@functools.partial(jax.jit, static_argnames=("patch",))
+def describe_keypoints(det: dict, *, patch: int = 16) -> dict:
+    """4x4 spatial cells x 8 orientation bins = 128-d descriptors,
+    orientation-normalized by the keypoint's dominant gradient bin."""
+    g = det["gray"]
+    mag, ang = gradients(g)
+    half = patch // 2
+
+    def one(xy, valid):
+        x0 = jnp.clip(xy[0].astype(jnp.int32) - half, 0, g.shape[1] - patch)
+        y0 = jnp.clip(xy[1].astype(jnp.int32) - half, 0, g.shape[0] - patch)
+        m = jax.lax.dynamic_slice(mag, (y0, x0), (patch, patch))
+        a = jax.lax.dynamic_slice(ang, (y0, x0), (patch, patch))
+        # dominant orientation (36-bin histogram)
+        ob = jnp.floor((a + math.pi) / (2 * math.pi) * 36).astype(jnp.int32) % 36
+        ohist = jnp.zeros((36,), jnp.float32).at[ob.reshape(-1)].add(m.reshape(-1))
+        dom = jnp.argmax(ohist).astype(jnp.float32) * (2 * math.pi / 36) - math.pi
+        rel = (a - dom + 3 * math.pi) % (2 * math.pi)          # [0, 2pi)
+        bins = jnp.floor(rel / (2 * math.pi) * 8).astype(jnp.int32) % 8
+        cell = (jnp.arange(patch) // (patch // 4))
+        ci = cell[:, None] * 4 + cell[None, :]                 # (patch, patch) in 0..15
+        flat_bin = ci * 8 + bins
+        d = jnp.zeros((128,), jnp.float32).at[flat_bin.reshape(-1)].add(m.reshape(-1))
+        d = d / jnp.maximum(jnp.linalg.norm(d), 1e-6)
+        d = jnp.minimum(d, 0.2)                                # SIFT clamp
+        d = d / jnp.maximum(jnp.linalg.norm(d), 1e-6)
+        return jnp.where(valid, d, 0.0)
+
+    desc = jax.vmap(one)(det["xy"], det["valid"])
+    return {"desc": desc, "valid": det["valid"]}
+
+
+def sift(img: Array, *, max_kp: int = 64) -> dict:
+    det = detect_keypoints(img, max_kp=max_kp)
+    d = describe_keypoints(det)
+    return {"xy": det["xy"], "desc": d["desc"], "valid": det["valid"], "resp": det["resp"]}

@@ -1,0 +1,56 @@
+"""Multi-class SVM (one-vs-rest linear + optional RBF features).
+
+The paper trains OpenCV's SVM on BoW histograms (dictionary 250) and times
+the *prediction* stage; training here is squared-hinge one-vs-rest by
+full-batch gradient descent with momentum (deterministic, jit-friendly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("n_classes", "steps"))
+def svm_train(x: Array, y: Array, *, n_classes: int, c: float = 1.0,
+              lr: float = 0.5, steps: int = 500) -> dict:
+    """x (N, D) f32, y (N,) int32 -> {'w': (C, D), 'b': (C,)}."""
+    N, D = x.shape
+    t = 2.0 * jax.nn.one_hot(y, n_classes, dtype=jnp.float32) - 1.0  # (N, C) +-1
+
+    def loss_fn(params):
+        w, b = params["w"], params["b"]
+        margins = x @ w.T + b[None, :]                        # (N, C)
+        hinge = jnp.maximum(0.0, 1.0 - t * margins)
+        return 0.5 * jnp.mean(jnp.sum(w * w, axis=1)) + c * jnp.mean(jnp.sum(hinge ** 2, axis=1))
+
+    params = {"w": jnp.zeros((n_classes, D), jnp.float32),
+              "b": jnp.zeros((n_classes,), jnp.float32)}
+    vel = jax.tree.map(jnp.zeros_like, params)
+
+    def step(carry, _):
+        params, vel = carry
+        g = jax.grad(loss_fn)(params)
+        vel = jax.tree.map(lambda v, gg: 0.9 * v - lr * gg, vel, g)
+        params = jax.tree.map(lambda p, v: p + v, params, vel)
+        return (params, vel), loss_fn(params)
+
+    (params, _), losses = jax.lax.scan(step, (params, vel), None, length=steps)
+    return {"w": params["w"], "b": params["b"], "final_loss": losses[-1]}
+
+
+@jax.jit
+def svm_predict(model: dict, x: Array) -> Array:
+    """x (N, D) -> predicted class (N,) int32 (the paper's stage III)."""
+    scores = x @ model["w"].T + model["b"][None, :]
+    return jnp.argmax(scores, axis=1).astype(jnp.int32)
+
+
+def rbf_features(x: Array, anchors: Array, gamma: float = 10.0) -> Array:
+    """Explicit RBF feature map against anchor points (for the paper's
+    non-linear kernels; observations in §4.5 are kernel-independent)."""
+    d2 = jnp.sum((x[:, None, :] - anchors[None]) ** 2, axis=-1)
+    return jnp.exp(-gamma * d2)

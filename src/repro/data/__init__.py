@@ -1,0 +1,1 @@
+from .synthetic import ImageStream, TokenStream  # noqa: F401

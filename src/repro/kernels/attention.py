@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: flash attention forward (block-width parameterized).
+
+The LM-stack hot spot. Online-softmax streaming over KV blocks with
+running (m, l, acc) state in VMEM scratch; grid (batch*heads, q_blocks,
+kv_blocks) — TPU executes the last grid dim sequentially, so scratch
+carries state across kv blocks (same pattern as kernels/bow.py).
+
+The paper's knob: `vc.lmul` scales the q-block rows and the kv-block rows
+(BlockSpec tile multiplicity), traded against VMEM by core.autotune.
+Used for TPU deployment; the XLA blockwise path in models/attention.py is
+what the 512-device dry-run lowers (Pallas TPU kernels don't lower on the
+CPU host), with numerical equivalence asserted in tests.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.vector import VectorConfig
+
+Array = jax.Array
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *, bq, bkv, hd, causal, scale, t_valid):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_s[...] = jnp.full((bq,), NEG, jnp.float32)
+        l_s[...] = jnp.zeros((bq,), jnp.float32)
+        acc_s[...] = jnp.zeros((bq, hd), jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                     # (bkv, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qi = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    ki = kb * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    ok = ki < t_valid          # zero-padded KV rows must never contribute
+    if causal:
+        ok = ok & (ki <= qi)
+    s = jnp.where(ok, s, NEG)
+    m_prev, l_prev = m_s[...], l_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    m_safe = jnp.where(m_new <= NEG / 2, 0.0, m_new)
+    p = jnp.exp(s - m_safe[:, None])
+    corr = jnp.where(m_prev <= NEG / 2, 0.0, jnp.exp(m_prev - m_safe))
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+    l_s[...] = l_new
+
+    @pl.when(kb == nk - 1)
+    def _done():
+        o_ref[0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "vc"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    vc: VectorConfig = VectorConfig()) -> Array:
+    """q/k/v (B, S, H, hd) MHA (same head count) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    bq = min(64 * vc.lmul, S)
+    bkv = min(128 * vc.lmul, T)
+    q_pad, kv_pad = (-S) % bq, (-T) % bkv
+    scale = 1.0 / math.sqrt(hd)
+
+    def prep(x, pad):
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x.transpose(0, 2, 1, 3).reshape(B * H, x.shape[1], hd)
+
+    qq, kk, vv = prep(q, q_pad), prep(k, kv_pad), prep(v, kv_pad)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bkv=bkv, hd=hd, causal=causal, scale=scale,
+                          t_valid=T),
+        grid=(B * H, (S + q_pad) // bq, (T + kv_pad) // bkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qq.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=vc.run_interpret,
+    )(qq, kk, vv)
+    out = out.reshape(B, H, S + q_pad, hd).transpose(0, 2, 1, 3)
+    return out[:, :S]

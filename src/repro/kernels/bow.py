@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: bag-of-words nearest-centroid assignment.
+
+The BoW feature-generation hot loop (paper §4.5) is "for every SIFT
+descriptor, find the nearest dictionary centroid". On TPU this is an
+MXU problem: d2(n, k) = |d_n|^2 - 2 d_n.c_k + |c_k|^2, i.e. a (N,128) x
+(128,K) matmul. The kernel fuses the matmul with a *running argmin* across
+centroid blocks (flash-attention-style streaming state in VMEM scratch),
+so the (N, K) distance matrix is never materialized in HBM — a
+beyond-paper fusion recorded in EXPERIMENTS.md §Perf.
+
+lmul scales the descriptor-block rows (8 f32 sublanes x lmul).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.vector import VectorConfig
+
+Array = jax.Array
+
+
+def _bow_kernel(d_ref, c_ref, c2_ref, idx_ref, val_ref, minv, mini, *, bn, bk):
+    kb = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        minv[...] = jnp.full((bn,), 1e30, jnp.float32)
+        mini[...] = jnp.zeros((bn,), jnp.int32)
+
+    d = d_ref[...]                                     # (bn, D) f32
+    c = c_ref[...]                                     # (bk, D) f32
+    # -2 d.c + |c|^2  (|d|^2 is constant per row: argmin-invariant)
+    s = -2.0 * jax.lax.dot_general(d, c, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+    s = s + c2_ref[...][None, :]
+    bmin = jnp.min(s, axis=1)
+    barg = jnp.argmin(s, axis=1).astype(jnp.int32) + kb * bk
+    better = bmin < minv[...]
+    mini[...] = jnp.where(better, barg, mini[...])
+    minv[...] = jnp.where(better, bmin, minv[...])
+
+    @pl.when(kb == nk - 1)
+    def _done():
+        idx_ref[...] = mini[...]
+        val_ref[...] = minv[...]
+
+
+@functools.partial(jax.jit, static_argnames=("vc",))
+def bow_assign(desc: Array, centroids: Array, *, vc: VectorConfig = VectorConfig()):
+    """desc (N, D) f32, centroids (K, D) f32 -> (idx (N,) i32, d2 (N,) f32).
+
+    d2 is the true squared distance (|d|^2 added back outside the kernel).
+    """
+    N, D = desc.shape
+    K = centroids.shape[0]
+    bn = vc.rows(jnp.float32) * 4          # MXU-friendly: 32*lmul rows
+    bk = 128
+    n_pad = (-N) % bn
+    k_pad = (-K) % bk
+    d = jnp.pad(desc.astype(jnp.float32), ((0, n_pad), (0, 0)))
+    c = jnp.pad(centroids.astype(jnp.float32), ((0, k_pad), (0, 0)))
+    c2 = jnp.sum(c * c, axis=1)
+    c2 = jnp.where(jnp.arange(c.shape[0]) < K, c2, 1e30)   # mask pad centroids
+
+    idx, val = pl.pallas_call(
+        functools.partial(_bow_kernel, bn=bn, bk=bk),
+        grid=(d.shape[0] // bn, c.shape[0] // bk),
+        in_specs=[
+            pl.BlockSpec((bn, D), lambda n, k: (n, 0)),
+            pl.BlockSpec((bk, D), lambda n, k: (k, 0)),
+            pl.BlockSpec((bk,), lambda n, k: (k,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda n, k: (n,)),
+            pl.BlockSpec((bn,), lambda n, k: (n,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((d.shape[0],), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bn,), jnp.float32),
+            pltpu.VMEM((bn,), jnp.int32),
+        ],
+        interpret=vc.run_interpret,
+    )(d, c, c2)
+    d2 = val[:N] + jnp.sum(desc.astype(jnp.float32) ** 2, axis=1)
+    return idx[:N], d2

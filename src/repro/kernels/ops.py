@@ -1,0 +1,33 @@
+"""Public jit'd wrappers for every kernel (the library API surface).
+
+All ops take a VectorConfig (default lmul=4, the paper's "Optim" rung).
+On non-TPU backends kernels execute in Pallas interpret mode for
+correctness; benchmarks on this CPU-only container therefore report
+structural/roofline metrics for the Pallas rungs and wall-clock for the
+jnp (XLA) rungs — see DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.vector import VectorConfig, DEFAULT, SEQ_VECTOR  # noqa: F401
+
+from . import ref
+from .attention import flash_attention  # noqa: F401
+from .bow import bow_assign  # noqa: F401
+from .erode import dilate, erode  # noqa: F401
+from .filter2d import filter2d, sep_filter2d  # noqa: F401
+
+
+def gaussian_blur(img, ksize: int, sigma: float | None = None, *,
+                  vc: VectorConfig = DEFAULT):
+    """OpenCV GaussianBlur via the fused separable kernel."""
+    k1 = ref.gaussian_kernel1d(ksize, sigma)
+    return sep_filter2d(img, k1, k1, vc=vc)
+
+
+def gaussian_filter2d(img, ksize: int, sigma: float | None = None, *,
+                      vc: VectorConfig = DEFAULT):
+    """The paper's filter2D benchmark: full 2D Gaussian kernel, direct conv."""
+    k1 = ref.gaussian_kernel1d(ksize, sigma)
+    return filter2d(img, jnp.outer(k1, k1), vc=vc)

@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics the kernels are tested against
+(tests/test_kernels_*.py sweep shapes/dtypes and assert_allclose), and they
+are the "SeqScalar"-rung implementations in the paper-table benchmarks
+(what XLA does without the hand-written kernel).
+
+Border policy: BORDER_REPLICATE (OpenCV default for filter2D/erode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _pad_replicate(img: Array, ph: int, pw: int) -> Array:
+    return jnp.pad(img, ((ph, ph), (pw, pw)) + ((0, 0),) * (img.ndim - 2), mode="edge")
+
+
+def filter2d_ref(img: Array, kernel: Array) -> Array:
+    """2D correlation (OpenCV filter2D), single channel (H, W) or (H, W, C).
+
+    u8 input -> f32 accumulation -> round + saturate back to u8
+    (OpenCV saturate_cast semantics); float input stays float.
+    """
+    kh, kw = kernel.shape
+    ph, pw = kh // 2, kw // 2
+    x = _pad_replicate(img, ph, pw).astype(jnp.float32)
+    out = jnp.zeros(img.shape, jnp.float32)
+    H, W = img.shape[:2]
+    for i in range(kh):
+        for j in range(kw):
+            out = out + kernel[i, j].astype(jnp.float32) * x[i:i + H, j:j + W]
+    if img.dtype == jnp.uint8:
+        return jnp.clip(jnp.round(out), 0, 255).astype(jnp.uint8)
+    return out.astype(img.dtype)
+
+
+def sep_filter2d_ref(img: Array, kx: Array, ky: Array) -> Array:
+    """Separable filter: row pass kx then column pass ky (float accumulate,
+    single rounding at the end — matches the fused kernel)."""
+    H, W = img.shape[:2]
+    pw, ph = kx.shape[0] // 2, ky.shape[0] // 2
+    x = _pad_replicate(img, 0, pw).astype(jnp.float32)
+    row = sum(kx[j].astype(jnp.float32) * x[:, j:j + W] for j in range(kx.shape[0]))
+    row = _pad_replicate(row, ph, 0)
+    out = sum(ky[i].astype(jnp.float32) * row[i:i + H] for i in range(ky.shape[0]))
+    if img.dtype == jnp.uint8:
+        return jnp.clip(jnp.round(out), 0, 255).astype(jnp.uint8)
+    return out.astype(img.dtype)
+
+
+def gaussian_kernel1d(ksize: int, sigma: float | None = None) -> Array:
+    """OpenCV getGaussianKernel: sigma default 0.3*((ksize-1)*0.5 - 1) + 0.8."""
+    if sigma is None or sigma <= 0:
+        sigma = 0.3 * ((ksize - 1) * 0.5 - 1) + 0.8
+    x = jnp.arange(ksize, dtype=jnp.float32) - (ksize - 1) / 2
+    k = jnp.exp(-(x * x) / (2 * sigma * sigma))
+    return k / jnp.sum(k)
+
+
+def erode_ref(img: Array, ksize: int) -> Array:
+    """Morphological erosion, (2*ksize+1)^2 rectangular structuring element
+    (the paper's 'filter size' parameter is the half-width)."""
+    r = ksize
+    x = _pad_replicate(img, r, r)
+    H, W = img.shape[:2]
+    out = x[0:H, 0:W]
+    for i in range(2 * r + 1):
+        for j in range(2 * r + 1):
+            out = jnp.minimum(out, x[i:i + H, j:j + W])
+    return out.astype(img.dtype)
+
+
+def dilate_ref(img: Array, ksize: int) -> Array:
+    r = ksize
+    x = _pad_replicate(img, r, r)
+    H, W = img.shape[:2]
+    out = x[0:H, 0:W]
+    for i in range(2 * r + 1):
+        for j in range(2 * r + 1):
+            out = jnp.maximum(out, x[i:i + H, j:j + W])
+    return out.astype(img.dtype)
+
+
+def bow_assign_ref(desc: Array, centroids: Array) -> tuple[Array, Array]:
+    """Nearest-centroid assignment. desc (N, D) f32, centroids (K, D) f32
+    -> (assignments (N,) int32, min squared distance (N,) f32)."""
+    d2 = (jnp.sum(desc * desc, axis=1, keepdims=True)
+          - 2.0 * desc @ centroids.T
+          + jnp.sum(centroids * centroids, axis=1)[None, :])
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return idx, jnp.take_along_axis(d2, idx[:, None], axis=1)[:, 0]
+
+
+def bow_histogram_ref(assign: Array, K: int, *, normalize: bool = True) -> Array:
+    h = jnp.zeros((K,), jnp.float32).at[assign].add(1.0)
+    if normalize:
+        h = h / jnp.maximum(jnp.sum(h), 1.0)
+    return h
+
+
+def svm_decision_ref(x: Array, w: Array, b: Array) -> Array:
+    """Linear multi-class decision values: x (N, D), w (C, D), b (C,)."""
+    return x @ w.T + b[None, :]
+
+
+def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True) -> Array:
+    """q/k/v (B, S, H, hd) -> (B, S, H, hd), fp32 softmax."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    if causal:
+        S, T = q.shape[1], k.shape[1]
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)

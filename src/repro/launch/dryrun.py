@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede any jax import: jax locks the device count on first init.
+
+import argparse
+import gc
+import json
+import math
+import subprocess
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config, extra_inputs
+from repro.configs.registry import cell_status
+from repro.models import lm
+from repro.models.config import SHAPES
+from repro.roofline.hlo_parse import parse_collectives, top_collectives
+from repro.serve import engine
+from repro.sharding import rules
+from repro.train import step as step_mod
+from repro.launch.mesh import make_production_mesh
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks", "artifacts", "dryrun")
+
+# Production optimizer choice per arch: Adafactor where full Adam state
+# cannot fit the pod (DESIGN §5).
+OPTIMIZER = {
+    "deepseek-v3-671b": "adafactor",
+    "arctic-480b": "adafactor",
+    "qwen2-72b": "adamw",
+}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sh = SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    if sh.kind == "train":
+        batch = {"tokens": sds((B, S), "int32"), "labels": sds((B, S), "int32")}
+    elif sh.kind == "prefill":
+        batch = {"tokens": sds((B, S), "int32")}
+    else:  # decode: one new token; the KV/state cache covers seq_len
+        batch = {"tokens": sds((B, 1), "int32")}
+    for name, (shp, dt) in extra_inputs(cfg, B, S).items():
+        if sh.kind != "decode":
+            batch[name] = sds(shp, dt)
+    return batch
+
+
+def _named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _zero1(spec: P, shape, mesh) -> P:
+    """ZeRO-1: shard optimizer state over every mesh axis the parameter
+    itself does not use ('model' for SP-FFN weights, 'pod' in multi-pod)."""
+    sizes = rules.mesh_axis_sizes(mesh)
+    fixed = list(tuple(spec) + (None,) * (len(shape) - len(spec)))
+    used = set()
+    for ax in fixed:
+        for a in ((ax,) if isinstance(ax, str) else (ax or ())):
+            used.add(a)
+    for extra in ("model", "pod"):
+        if extra not in sizes or extra in used:
+            continue
+        for i, (ax, d) in enumerate(zip(fixed, shape)):
+            if ax is None and d % sizes[extra] == 0 and d > 1:
+                fixed[i] = extra
+                used.add(extra)
+                break
+            if isinstance(ax, str) and d % (sizes[ax] * sizes[extra]) == 0:
+                fixed[i] = (ax, extra)
+                used.add(extra)
+                break
+    return P(*fixed)
+
+
+def opt_state_specs(opt_shapes, params_shapes, pspecs, mesh, optimizer: str):
+    is_p = lambda x: isinstance(x, P)
+    flat_shapes, treedef = jax.tree_util.tree_flatten(params_shapes)
+    flat_specs = jax.tree_util.tree_leaves(pspecs, is_leaf=is_p)
+    if optimizer == "adamw":
+        mflat = [_zero1(sp, sh.shape, mesh) for sh, sp in zip(flat_shapes, flat_specs)]
+        mspec = jax.tree_util.tree_unflatten(treedef, mflat)
+        return {"m": mspec, "v": mspec, "count": P()}
+    # adafactor: state["f"] is a list parallel to flattened params
+    f_specs = []
+    for sh, sp in zip(flat_shapes, flat_specs):
+        axes = tuple(sp) + (None,) * (len(sh.shape) - len(tuple(sp)))
+        if len(sh.shape) >= 2:
+            f_specs.append({"vr": _zero1(P(*axes[:-1]), sh.shape[:-1], mesh),
+                            "vc": _zero1(P(*axes[:-2], axes[-1]), sh.shape[:-2] + sh.shape[-1:], mesh)})
+        else:
+            f_specs.append({"v": P(*axes)})
+    return {"f": f_specs, "count": P()}
+
+
+def count_params(params_shapes, active: bool, cfg) -> float:
+    """Total (or MoE-active) parameter count, excluding nothing."""
+    total = 0.0
+
+    def one(keypath, leaf):
+        nonlocal total
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
+        n = float(math.prod(leaf.shape))
+        if active and cfg.moe is not None and len(leaf.shape) >= 3 and \
+                names[-1] in ("w_gate", "w_up", "w_down") and "moe" in names:
+            n *= cfg.moe.top_k / cfg.moe.n_experts
+        total += n
+
+    jax.tree_util.tree_map_with_path(one, params_shapes)
+    return total
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "status": "ok"}
+    skip = cell_status(cfg, shape_name)
+    if skip:
+        rec.update(status="skip", reason=skip)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    opt_name = OPTIMIZER.get(arch, "adamw")
+    key = jax.random.key(0)
+    t0 = time.time()
+
+    params_shapes = jax.eval_shape(partial(lm.init_params, cfg=cfg), key)
+    pspecs = rules.param_specs(params_shapes, cfg, mesh)
+    rec["params_total"] = count_params(params_shapes, False, cfg)
+    rec["params_active"] = count_params(params_shapes, True, cfg)
+    batch = input_specs(cfg, shape_name)
+
+    with mesh:
+        if sh.kind == "train":
+            state_shapes = jax.eval_shape(partial(step_mod.init_state, cfg=cfg, optimizer=opt_name), key)
+            ospecs = opt_state_specs(state_shapes["opt"], params_shapes, pspecs, mesh, opt_name)
+            state_specs = {"params": pspecs, "opt": ospecs, "step": P()}
+            bspecs = rules.batch_specs(batch, mesh, cfg)
+            fn = step_mod.make_train_step(cfg, mesh, optimizer=opt_name)
+            jitted = jax.jit(fn,
+                             in_shardings=(_named(state_specs, mesh), _named(bspecs, mesh)),
+                             out_shardings=(_named(state_specs, mesh), None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shapes, batch)
+            rec["optimizer"] = opt_name
+            rec["tokens_per_step"] = sh.global_batch * sh.seq_len
+        elif sh.kind == "prefill":
+            fn = engine.make_prefill_step(cfg, mesh)
+            out_shapes = jax.eval_shape(fn, params_shapes, batch)
+            cspecs = rules.cache_specs(out_shapes[1], mesh, cfg)
+            dp = rules.dp_axes(mesh, cfg)
+            sizes = rules.mesh_axis_sizes(mesh)
+            tok_out = P(rules._maybe(dp, sh.global_batch, sizes))
+            jitted = jax.jit(fn,
+                             in_shardings=(_named(pspecs, mesh), _named(rules.batch_specs(batch, mesh, cfg), mesh)),
+                             out_shardings=(NamedSharding(mesh, tok_out), _named(cspecs, mesh)))
+            lowered = jitted.lower(params_shapes, batch)
+            rec["tokens_per_step"] = sh.global_batch * sh.seq_len
+        else:  # decode
+            B = sh.global_batch
+            ctx_len = None
+            if cfg.encdec or any(k == "xattn" for k, _ in cfg.blocks):
+                ctx_len = 4096 if cfg.encdec else cfg.n_image_tokens
+            cache_shapes = jax.eval_shape(
+                lambda: lm.init_cache(cfg, B, sh.seq_len, ctx_len=ctx_len))
+            cspecs = rules.cache_specs(cache_shapes, mesh, cfg)
+            fn = engine.make_decode_step(cfg, mesh)
+            dp = rules.dp_axes(mesh, cfg)
+            sizes = rules.mesh_axis_sizes(mesh)
+            tok_out = P(rules._maybe(dp, B, sizes))
+            tok_spec = rules.batch_specs(batch, mesh, cfg)
+            jitted = jax.jit(fn,
+                             in_shardings=(_named(pspecs, mesh), _named(cspecs, mesh),
+                                           _named(tok_spec["tokens"], mesh)),
+                             out_shardings=(NamedSharding(mesh, tok_out), _named(cspecs, mesh)),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_shapes, cache_shapes, batch["tokens"])
+            rec["tokens_per_step"] = B
+            rec["cache_bytes_global"] = float(sum(
+                math.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(cache_shapes)))
+        rec["seconds_lower"] = time.time() - t0
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["seconds_compile"] = time.time() - t1
+
+        ma = compiled.memory_analysis()
+        for f in ("argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes",
+                  "alias_size_in_bytes", "generated_code_size_in_bytes"):
+            rec.setdefault("memory", {})[f] = getattr(ma, f, None)
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float)) and not k.startswith("utilization")}
+        txt = compiled.as_text()
+        parsed = parse_collectives(txt)
+        rec["collectives"] = {"link_bytes": parsed["link_bytes"],
+                              "count": parsed["count"],
+                              "bytes_by_kind": parsed["bytes_by_kind"],
+                              "top": top_collectives(parsed, 8)}
+        rec["hlo_chars"] = len(txt)
+        rec["_hlo_text"] = txt  # saved as a gzip sidecar by run_cell
+    return rec
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir):
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod)
+    except Exception as e:  # noqa: BLE001
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{rec['mesh']}.json".replace("/", "_")
+    hlo = rec.pop("_hlo_text", None)
+    if hlo is not None:
+        import gzip
+        with gzip.open(os.path.join(out_dir, fname.replace(".json", ".hlo.gz")), "wt") as f:
+            f.write(hlo)
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    status = rec["status"]
+    extra = rec.get("reason") or rec.get("error", "")
+    print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: {status} {extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--cell", default=None, help="arch:shape:mesh (subprocess mode)")
+    ap.add_argument("--out", default=os.path.normpath(ART_DIR))
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--force", action="store_true", help="re-run cells with artifacts")
+    args = ap.parse_args()
+
+    if args.cell:
+        arch, shape_name, mesh = args.cell.split(":")
+        rec = run_cell(arch, shape_name, mesh == "multipod", args.out)
+        sys.exit(0 if rec["status"] in ("ok", "skip") else 1)
+
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"pod": ["pod"], "multipod": ["multipod"], "both": ["pod", "multipod"]}[args.mesh]
+
+    cells = [(a, s, m) for a in archs for s in shapes for m in meshes]
+    if not args.force:
+        def have(a, s, m):
+            mm = "2x16x16" if m == "multipod" else "16x16"
+            path = os.path.join(args.out, f"{a}__{s}__{mm}.json")
+            if not os.path.exists(path):
+                return False
+            with open(path) as f:
+                return json.load(f).get("status") in ("ok", "skip")
+        cells = [c for c in cells if not have(*c)]
+    print(f"[dryrun] {len(cells)} cells to run")
+
+    # one subprocess per cell: isolates compile memory, enables parallelism
+    procs: list[tuple[subprocess.Popen, tuple]] = []
+    pending = list(cells)
+    fails = []
+    while pending or procs:
+        while pending and len(procs) < args.jobs:
+            cell = pending.pop(0)
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--cell", ":".join(cell), "--out", args.out]
+            procs.append((subprocess.Popen(cmd), cell))
+        done = []
+        for i, (pr, cell) in enumerate(procs):
+            if pr.poll() is not None:
+                done.append(i)
+                if pr.returncode != 0:
+                    fails.append(cell)
+        for i in reversed(done):
+            procs.pop(i)
+        time.sleep(2)
+    print(f"[dryrun] complete; {len(fails)} failures: {fails}")
+    sys.exit(1 if fails else 0)
+
+
+if __name__ == "__main__":
+    main()

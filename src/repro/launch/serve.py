@@ -1,0 +1,48 @@
+"""Serving launcher: batched greedy generation with a simple request queue.
+
+`python -m repro.launch.serve --arch xlstm-125m --reduced --requests 8`
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import extra_inputs, get_config, reduced_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import lm
+    from repro.serve.engine import generate
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    mesh = make_host_mesh()
+    key = jax.random.key(0)
+    params = lm.init_params(key, cfg)
+    B = args.requests
+    prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab_size)
+    extras = {}
+    for name, (shp, dt) in extra_inputs(cfg, B, args.prompt_len).items():
+        extras[name] = jax.random.normal(key, shp, jnp.float32).astype(jnp.dtype(dt)) * 0.02
+
+    t0 = time.perf_counter()
+    with mesh:
+        out = generate(params, cfg, prompts, steps=args.gen_len, mesh=mesh, extras=extras)
+    dt_s = time.perf_counter() - t0
+    toks = B * args.gen_len
+    print(f"[serve] generated {toks} tokens in {dt_s:.2f}s "
+          f"({toks / dt_s:.1f} tok/s incl. compile) — output shape {out.shape}")
+    print("[serve] first request tokens:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

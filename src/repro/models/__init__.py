@@ -1,0 +1,1 @@
+from . import attention, blocks, config, layers, lm, moe, ssm, xlstm  # noqa: F401

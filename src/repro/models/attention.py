@@ -1,0 +1,385 @@
+"""Attention: GQA/MQA (dense + blockwise/flash-style), MLA, SWA, cross-attn.
+
+Layout conventions
+------------------
+q: (B, S, Hq, hd)     k/v: (B, T, Hkv, hd)
+Causal masking is computed from *absolute* positions so that
+sequence-sharded (SP) and ring-buffer (SWA decode) layouts stay correct
+under SPMD partitioning.
+
+Two execution styles:
+  * dense     — one einsum; fine for short sequences / decode.
+  * blockwise — lax.scan over KV chunks with an online softmax
+                (flash-attention recurrence in pure jnp). Memory
+                O(S * chunk) instead of O(S * T).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos: Array, kv_pos: Array, *, causal: bool, window: int | None,
+               kv_valid: Array | None) -> Array:
+    """(..., Sq, Tk) additive bias in fp32 from absolute positions.
+
+    q_pos: (Sq,) or (B, Sq); kv_pos: (Tk,) or (B, Tk) absolute positions.
+    kv_valid: optional (Tk,) / (B, Tk) bool — False lanes are masked
+    (used for ring buffers that are not yet full).
+    """
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    ok = kp < 2**29  # padded / invalid slots carry position >= 2**30
+    if causal:
+        ok = ok & (kp <= qp)
+    if window is not None:
+        ok &= kp > qp - window
+    if kv_valid is not None:
+        ok &= kv_valid[..., None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _soft_cap(scores: Array, cap: float | None) -> Array:
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def _repeat_kv(k: Array, n_rep: int) -> Array:
+    if n_rep == 1:
+        return k
+    b, t, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, t, h, n_rep, d)).reshape(b, t, h * n_rep, d)
+
+
+def dense_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    q_pos: Array | None = None, kv_pos: Array | None = None,
+                    window: int | None = None, kv_valid: Array | None = None,
+                    soft_cap: float | None = None, scale: float | None = None,
+                    grouped: bool = False) -> Array:
+    """Plain attention. `grouped=True` keeps KV un-repeated and reshapes q
+    into (G, R) head groups — preferred for decode (KV cache not blown up
+    by n_rep) and for head-count-indivisible archs under SP sharding."""
+    B, S, Hq, hd = q.shape
+    T, G = k.shape[1], k.shape[2]
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if q_pos is None:
+        q_pos = jnp.arange(S)
+    if kv_pos is None:
+        kv_pos = jnp.arange(T)
+    bias = _mask_bias(q_pos, kv_pos, causal=causal, window=window, kv_valid=kv_valid)
+    # bias broadcast: (S, T) -> (1, 1, S, T); (B, S, T) -> (B, 1, S, T)
+    bias = bias[None, None] if bias.ndim == 2 else bias[:, None]
+    if grouped:
+        R = Hq // G
+        qg = q.reshape(B, S, G, R, hd)
+        scores = jnp.einsum("bsgrd,btgd->bgrst", qg.astype(jnp.float32), k.astype(jnp.float32)) * sc
+        scores = _soft_cap(scores, soft_cap) + bias[:, :, None]
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bgrst,btgd->bsgrd", probs.astype(v.dtype), v)
+        return out.reshape(B, S, Hq, hd)
+    kr, vr = _repeat_kv(k, Hq // G), _repeat_kv(v, Hq // G)
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), kr.astype(jnp.float32)) * sc
+    scores = _soft_cap(scores, soft_cap) + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", probs.astype(vr.dtype), vr)
+
+
+def blockwise_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        q_pos: Array | None = None, kv_pos: Array | None = None,
+                        window: int | None = None, soft_cap: float | None = None,
+                        scale: float | None = None, chunk: int = 1024,
+                        grouped: bool = False) -> Array:
+    """Flash-style online-softmax attention: lax.scan over KV chunks.
+
+    Peak score memory is O(B * H * S * chunk). Used for prefill / long-
+    sequence training. Operates on absolute positions like dense_attention.
+    """
+    B, S, Hq, hd = q.shape
+    T, G = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]  # may differ from hd (MLA: qk 192, v 128)
+    R = Hq // G
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if q_pos is None:
+        q_pos = jnp.arange(S)
+    if kv_pos is None:
+        kv_pos = jnp.arange(T)
+    n_chunks = -(-T // chunk)
+    pad = n_chunks * chunk - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=2**30)  # masked out by causal
+    kc = k.reshape(B, n_chunks, chunk, G, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, G, hdv).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(n_chunks, chunk)
+
+    # keep q/k/v in their storage dtype (bf16): collectives and loop-carried
+    # state stay half-width; MXU-style fp32 accumulation comes from
+    # preferred_element_type on the einsums (§Perf H2).
+    if grouped:
+        qq = q.reshape(B, S, G, R, hd)
+        acc0 = jnp.zeros((B, S, G, R, hdv), jnp.float32)
+        mx0 = jnp.full((B, S, G, R), NEG_INF, jnp.float32)
+    else:
+        qq = q
+        acc0 = jnp.zeros((B, S, Hq, hdv), jnp.float32)
+        mx0 = jnp.full((B, S, Hq), NEG_INF, jnp.float32)
+    lse0 = jnp.zeros_like(mx0)
+
+    def body(carry, xs):
+        acc, mx, l = carry
+        kb, vb, pb = xs  # (B, C, G, hd), (C,)
+        bias = _mask_bias(q_pos, pb, causal=causal, window=window, kv_valid=None)
+        if grouped:
+            # bias (S,C) -> (1,S,1,1,C); (B,S,C) -> (B,S,1,1,C)
+            bb = bias[None, :, None, None, :] if bias.ndim == 2 else bias[:, :, None, None, :]
+            s = jnp.einsum("bsgrd,bcgd->bsgrc", qq, kb,
+                           preferred_element_type=jnp.float32) * sc
+            s = _soft_cap(s, soft_cap) + bb
+        else:
+            # bias (S,C) -> (1,S,1,C); (B,S,C) -> (B,S,1,C)
+            bb = bias[None, :, None, :] if bias.ndim == 2 else bias[:, :, None, :]
+            s = jnp.einsum("bshd,bchd->bshc", qq, _repeat_kv(kb, R),
+                           preferred_element_type=jnp.float32) * sc
+            s = _soft_cap(s, soft_cap) + bb
+        m_new = jnp.maximum(mx, jnp.max(s, axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.exp(jnp.where(mx <= NEG_INF / 2, NEG_INF, mx) - m_safe)
+        corr = jnp.where(mx <= NEG_INF / 2, 0.0, corr)
+        pv = p.astype(v.dtype)
+        if grouped:
+            o = jnp.einsum("bsgrc,bcgd->bsgrd", pv, vb,
+                           preferred_element_type=jnp.float32)
+        else:
+            o = jnp.einsum("bshc,bchd->bshd", pv, _repeat_kv(vb, R),
+                           preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + o
+        l = l * corr + jnp.sum(p, axis=-1)
+        return (acc, m_new, l), None
+
+    (acc, _, l), _ = jax.lax.scan(body, (acc0, mx0, lse0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    if grouped:
+        out = out.reshape(B, S, Hq, hd)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, q_pos=None, kv_pos=None, window=None,
+              kv_valid=None, soft_cap=None, scale=None, grouped=False,
+              chunk: int = 1024, blockwise_threshold: int = 8192):
+    """Dispatch dense vs blockwise on total KV length."""
+    if k.shape[1] > blockwise_threshold and kv_valid is None:
+        return blockwise_attention(q, k, v, causal=causal, q_pos=q_pos, kv_pos=kv_pos,
+                                   window=window, soft_cap=soft_cap, scale=scale,
+                                   chunk=chunk, grouped=grouped)
+    return dense_attention(q, k, v, causal=causal, q_pos=q_pos, kv_pos=kv_pos,
+                           window=window, kv_valid=kv_valid, soft_cap=soft_cap,
+                           scale=scale, grouped=grouped)
+
+
+# ---------------------------------------------------------------------------
+# Standard GQA attention block (projections + rope + attention)
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg) -> dict:
+    d, hq, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    p = {
+        "w_q": dense_init(ks[0], (d, hq * hd), dtype=dt),
+        "w_k": dense_init(ks[1], (d, g * hd), dtype=dt),
+        "w_v": dense_init(ks[2], (d, g * hd), dtype=dt),
+        "w_o": dense_init(ks[3], (hq * hd, d), dtype=dt, scale=1.0 / math.sqrt(hq * hd * 2 * cfg.n_layers)),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((hq * hd,), jnp.float32)
+        p["b_k"] = jnp.zeros((g * hd,), jnp.float32)
+        p["b_v"] = jnp.zeros((g * hd,), jnp.float32)
+    return p
+
+
+def gqa_project_qkv(p, x, cfg, positions):
+    """x (B,S,D) -> q (B,S,Hq,hd), k/v (B,S,G,hd) with RoPE applied."""
+    B, S, _ = x.shape
+    hq, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["w_q"] + (p.get("b_q", 0.0))).reshape(B, S, hq, hd)
+    k = (x @ p["w_k"] + (p.get("b_k", 0.0))).reshape(B, S, g, hd)
+    v = (x @ p["w_v"] + (p.get("b_v", 0.0))).reshape(B, S, g, hd)
+    q = q.astype(x.dtype)
+    k = k.astype(x.dtype)
+    v = v.astype(x.dtype)
+    if cfg.rope_theta:
+        q = apply_rope(q, positions, theta=cfg.rope_theta, rotary_dim=cfg.rotary_dim)
+        k = apply_rope(k, positions, theta=cfg.rope_theta, rotary_dim=cfg.rotary_dim)
+    return q, k, v
+
+
+def gqa_attn(p, x, cfg, *, positions, hint=lambda a, *_: a, chunk=1024):
+    """Full-sequence self-attention (train / prefill). Returns (out, (k, v))."""
+    q, k, v = gqa_project_qkv(p, x, cfg, positions)
+    q, k, v = hint(q, "heads_q"), hint(k, "heads_kv"), hint(v, "heads_kv")
+    # grouped (SP) attention unless BOTH q and kv heads can TP: repeating KV
+    # to TP-able q heads costs an n_rep x gather; SP shards S instead.
+    grouped = not (cfg.heads_shardable and cfg.kv_heads_shardable)
+    out = attention(q, k, v, causal=cfg.causal, q_pos=positions, kv_pos=positions,
+                    window=cfg.window, soft_cap=cfg.attn_soft_cap,
+                    scale=cfg.attn_scale, grouped=grouped, chunk=chunk)
+    out = hint(out, "heads_q")
+    return out.reshape(*x.shape[:2], -1) @ p["w_o"], (k, v)
+
+
+def gqa_decode(p, x, cfg, *, cache_k, cache_v, pos, kv_pos, kv_valid, hint=lambda a, *_: a):
+    """Single-token decode against a (possibly ring-buffer) KV cache.
+
+    cache_k/v: (B, T, G, hd); pos: scalar absolute position of the new token;
+    kv_pos: (T,) absolute position held by each cache slot *after* insertion;
+    kv_valid: (T,) bool slot validity. Returns (out, (new_k_slot, new_v_slot)).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k, v = gqa_project_qkv(p, x, cfg, positions)
+    slot = pos % cache_k.shape[1]  # ring (== pos when cache covers full seq)
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+    out = dense_attention(q, ck, cv, causal=True, q_pos=positions, kv_pos=kv_pos,
+                          window=cfg.window, kv_valid=kv_valid,
+                          soft_cap=cfg.attn_soft_cap, scale=cfg.attn_scale, grouped=True)
+    return out.reshape(B, 1, -1) @ p["w_o"], (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (VLM gated layers, encoder-decoder)
+# ---------------------------------------------------------------------------
+
+def init_cross_attn(key, cfg, *, gated: bool) -> dict:
+    p = init_gqa(key, cfg)
+    if gated:
+        p["gate_attn"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def cross_attn(p, x, ctx_kv, cfg, *, hint=lambda a, *_: a):
+    """x (B,S,D) attends over precomputed ctx K/V (B,T,G,hd) pair."""
+    B, S, _ = x.shape
+    hq, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["w_q"] + p.get("b_q", 0.0)).astype(x.dtype).reshape(B, S, hq, hd)
+    q = hint(q, "heads_q")
+    k, v = ctx_kv
+    out = dense_attention(q, k, v, causal=False, q_pos=jnp.zeros((S,), jnp.int32),
+                          kv_pos=jnp.zeros((k.shape[1],), jnp.int32),
+                          scale=cfg.attn_scale, grouped=not cfg.heads_shardable)
+    out = out.reshape(B, S, -1) @ p["w_o"]
+    if "gate_attn" in p:
+        out = jnp.tanh(p["gate_attn"]).astype(out.dtype) * out
+    return out
+
+
+def cross_kv(p, ctx, cfg):
+    """Project context (B,T,D) to K/V once (no RoPE for cross-attn)."""
+    B, T, _ = ctx.shape
+    g, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (ctx @ p["w_k"] + p.get("b_k", 0.0)).astype(ctx.dtype).reshape(B, T, g, hd)
+    v = (ctx @ p["w_v"] + p.get("b_v", 0.0)).astype(ctx.dtype).reshape(B, T, g, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V2/V3)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    dt = cfg.param_dtype
+    qk_head = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "w_dq": dense_init(ks[0], (d, m.q_lora_rank), dtype=dt),
+        "q_norm": {"scale": jnp.ones((m.q_lora_rank,), jnp.float32)},
+        "w_uq": dense_init(ks[1], (m.q_lora_rank, h * qk_head), dtype=dt),
+        "w_dkv": dense_init(ks[2], (d, m.kv_lora_rank), dtype=dt),
+        "kv_norm": {"scale": jnp.ones((m.kv_lora_rank,), jnp.float32)},
+        "w_uk": dense_init(ks[3], (m.kv_lora_rank, h * m.qk_nope_dim), dtype=dt),
+        "w_uv": dense_init(ks[4], (m.kv_lora_rank, h * m.v_dim), dtype=dt),
+        "w_kr": dense_init(ks[5], (d, m.qk_rope_dim), dtype=dt),
+        "w_o": dense_init(ks[6], (h * m.v_dim, d), dtype=dt,
+                          scale=1.0 / math.sqrt(h * m.v_dim * 2 * cfg.n_layers)),
+    }
+
+
+def _mla_latents(p, x, cfg, positions):
+    """Compressed latents: c_kv (B,T,r_kv), k_rope (B,T,1,rope_dim)."""
+    from .layers import rms_norm
+    m = cfg.mla
+    c_kv = rms_norm(x @ p["w_dkv"], p["kv_norm"]["scale"], eps=cfg.norm_eps)
+    k_r = (x @ p["w_kr"]).reshape(*x.shape[:2], 1, m.qk_rope_dim)
+    k_r = apply_rope(k_r, positions, theta=cfg.rope_theta)
+    return c_kv, k_r
+
+
+def _mla_q(p, x, cfg, positions):
+    from .layers import rms_norm
+    m = cfg.mla
+    h = cfg.n_heads
+    cq = rms_norm(x @ p["w_dq"], p["q_norm"]["scale"], eps=cfg.norm_eps)
+    q = (cq @ p["w_uq"]).reshape(*x.shape[:2], h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attn(p, x, cfg, *, positions, hint=lambda a, *_: a, chunk=1024):
+    """Training/prefill MLA (materialized heads). Returns out, (c_kv, k_rope)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    c_kv, k_r = _mla_latents(p, x, cfg, positions)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, S, h, m.qk_nope_dim)
+    v = (c_kv @ p["w_uv"]).reshape(B, S, h, m.v_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_r, (B, S, h, m.qk_rope_dim))], axis=-1)
+    q, k, v = hint(q, "heads_q"), hint(k, "heads_q"), hint(v, "heads_q")
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    out = attention(q, k, v, causal=True, q_pos=positions, kv_pos=positions,
+                    scale=scale, chunk=chunk)
+    out = hint(out, "heads_q")
+    return out.reshape(B, S, -1) @ p["w_o"], (c_kv, k_r[:, :, 0, :])
+
+
+def mla_decode(p, x, cfg, *, cache_ckv, cache_kr, pos, kv_pos, kv_valid):
+    """Absorbed-matrix MLA decode: attention runs in the latent space, the
+    cache stores only (c_kv, k_rope) — the whole point of MLA."""
+    m = cfg.mla
+    B = x.shape[0]
+    h = cfg.n_heads
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    c_kv, k_r = _mla_latents(p, x, cfg, positions)  # (B,1,r), (B,1,1,rd)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)   # (B,1,h,*)
+    slot = pos % cache_ckv.shape[1]
+    ckv = jax.lax.dynamic_update_slice(cache_ckv, c_kv.astype(cache_ckv.dtype), (0, slot, 0))
+    ckr = jax.lax.dynamic_update_slice(cache_kr, k_r[:, :, 0, :].astype(cache_kr.dtype), (0, slot, 0))
+    # absorb: q_c = q_nope @ w_uk  (per head) -> latent-space query
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    q_c = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    s = jnp.einsum("bshr,btr->bhst", q_c, ckv.astype(jnp.float32))
+    s = s + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32), ckr.astype(jnp.float32))
+    bias = _mask_bias(positions, kv_pos, causal=True, window=None, kv_valid=kv_valid)
+    probs = jax.nn.softmax(s * scale + bias[:, None], axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", probs, ckv.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, h, m.v_dim)
+    out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv.astype(jnp.float32)).astype(x.dtype)
+    return out.reshape(B, 1, -1) @ p["w_o"], (ckv, ckr)

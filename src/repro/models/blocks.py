@@ -1,0 +1,231 @@
+"""Per-layer blocks: init / full-sequence apply / decode apply, plus KV/state
+cache construction. A block kind is a string; homogeneous runs of the same
+kind are stacked and scanned by lm.py.
+
+Kinds:
+  attn      self-attention (GQA/MQA, optional SWA) + dense MLP
+  moe       self-attention + MoE FFN (optionally + parallel dense FFN — Arctic)
+  mla       MLA attention + dense MLP            (DeepSeek dense layers)
+  mla_moe   MLA attention + MoE FFN              (DeepSeek MoE layers)
+  mamba     Mamba2 mixer                          (Zamba2 backbone)
+  mlstm     xLSTM mLSTM block
+  slstm     xLSTM sLSTM block
+  xattn     gated cross-attention + gated MLP     (Llama-3.2-Vision)
+  enc       bidirectional self-attention + MLP    (encoder)
+  dec       causal self-attn + cross-attn + MLP   (decoder)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .layers import apply_mlp, apply_norm, init_mlp, init_norm
+
+Array = jax.Array
+
+_NO_METRICS: dict = {}
+
+
+def _norm(cfg):
+    return dict(kind=cfg.norm, eps=cfg.norm_eps, gemma_style=cfg.gemma_norm)
+
+
+def init_block(key, kind: str, cfg) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    nrm = lambda: init_norm(d, kind=cfg.norm, gemma_style=cfg.gemma_norm)
+    if kind in ("attn", "enc"):
+        return {"ln1": nrm(), "attn": attn_mod.init_gqa(ks[0], cfg), "ln2": nrm(),
+                "mlp": init_mlp(ks[1], d, cfg.d_ff, style=cfg.mlp_style, dtype=cfg.param_dtype)}
+    if kind == "moe":
+        p = {"ln1": nrm(), "attn": attn_mod.init_gqa(ks[0], cfg), "ln2": nrm(),
+             "moe": moe_mod.init_moe(ks[1], cfg)}
+        if cfg.moe.dense_parallel:
+            p["dense_mlp"] = init_mlp(ks[2], d, cfg.d_ff, style=cfg.mlp_style, dtype=cfg.param_dtype)
+            p["ln_dense"] = nrm()
+        return p
+    if kind == "mla":
+        return {"ln1": nrm(), "attn": attn_mod.init_mla(ks[0], cfg), "ln2": nrm(),
+                "mlp": init_mlp(ks[1], d, cfg.d_ff, style=cfg.mlp_style, dtype=cfg.param_dtype)}
+    if kind == "mla_moe":
+        return {"ln1": nrm(), "attn": attn_mod.init_mla(ks[0], cfg), "ln2": nrm(),
+                "moe": moe_mod.init_moe(ks[1], cfg)}
+    if kind == "mamba":
+        return {"ln1": nrm(), "mixer": ssm_mod.init_mamba2(ks[0], cfg)}
+    if kind == "mlstm":
+        return {"ln1": nrm(), "cell": xlstm_mod.init_mlstm_block(ks[0], cfg)}
+    if kind == "slstm":
+        return {"ln1": nrm(), "cell": xlstm_mod.init_slstm_block(ks[0], cfg)}
+    if kind == "xattn":
+        p = {"ln1": nrm(), "attn": attn_mod.init_cross_attn(ks[0], cfg, gated=True), "ln2": nrm(),
+             "mlp": init_mlp(ks[1], d, cfg.d_ff, style=cfg.mlp_style, dtype=cfg.param_dtype),
+             "gate_mlp": jnp.zeros((), jnp.float32)}
+        return p
+    if kind == "dec":
+        return {"ln1": nrm(), "attn": attn_mod.init_gqa(ks[0], cfg),
+                "ln_x": nrm(), "xattn": attn_mod.init_cross_attn(ks[1], cfg, gated=False),
+                "ln2": nrm(), "mlp": init_mlp(ks[2], d, cfg.d_ff, style=cfg.mlp_style, dtype=cfg.param_dtype)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence apply (train / prefill). Returns (h, cache_entry, metrics).
+# ---------------------------------------------------------------------------
+
+def apply_block(kind: str, p: dict, h: Array, cfg, *, positions, ctx=None,
+                hint=lambda a, *_: a) -> tuple[Array, dict | None, dict]:
+    n = _norm(cfg)
+    if kind in ("attn", "enc", "moe", "mla", "mla_moe"):
+        causal_cfg = cfg if kind != "enc" else cfg.replace(causal=False)
+        x = apply_norm(h, p["ln1"], **n)
+        if kind in ("mla", "mla_moe"):
+            a, (ckv, kr) = attn_mod.mla_attn(p["attn"], x, cfg, positions=positions,
+                                             hint=hint, chunk=cfg.blockwise_chunk)
+            cache = {"ckv": ckv, "kr": kr}
+        else:
+            a, (k, v) = attn_mod.gqa_attn(p["attn"], x, causal_cfg, positions=positions,
+                                          hint=hint, chunk=cfg.blockwise_chunk)
+            cache = {"k": k, "v": v}
+        # constrain the row-parallel output to the SP layout *before* the
+        # residual add: SPMD then reduce-scatters the partial sums instead
+        # of all-reducing a replicated fp32 tensor (§Perf H1).
+        h = h + hint(a, "act")
+        metrics = _NO_METRICS
+        if kind in ("moe", "mla_moe"):
+            x2 = apply_norm(h, p["ln2"], **n)
+            mo, metrics = moe_mod.moe_ffn(p["moe"], x2, cfg, hint=hint)
+            if "dense_mlp" in p:
+                xd = apply_norm(h, p["ln_dense"], **n)
+                mo = mo + apply_mlp(p["dense_mlp"], xd, act=cfg.act, style=cfg.mlp_style, hint=hint)
+            h = h + hint(mo, "act")
+        else:
+            x2 = apply_norm(h, p["ln2"], **n)
+            h = h + hint(apply_mlp(p["mlp"], x2, act=cfg.act, style=cfg.mlp_style, hint=hint), "act")
+        return h, cache, metrics
+    if kind == "mamba":
+        x = apply_norm(h, p["ln1"], **n)
+        y, fin = ssm_mod.mamba2_mixer(p["mixer"], x, cfg, hint=hint)
+        return h + y, fin, _NO_METRICS
+    if kind == "mlstm":
+        x = apply_norm(h, p["ln1"], **n)
+        y, fin = xlstm_mod.mlstm_block(p["cell"], x, cfg, hint=hint)
+        return h + y, fin, _NO_METRICS
+    if kind == "slstm":
+        x = apply_norm(h, p["ln1"], **n)
+        y, fin = xlstm_mod.slstm_block(p["cell"], x, cfg, hint=hint)
+        return h + y, fin, _NO_METRICS
+    if kind == "xattn":
+        ctx_kv = attn_mod.cross_kv(p["attn"], ctx, cfg)
+        x = apply_norm(h, p["ln1"], **n)
+        h = h + attn_mod.cross_attn(p["attn"], x, ctx_kv, cfg, hint=hint)
+        x2 = apply_norm(h, p["ln2"], **n)
+        m = apply_mlp(p["mlp"], x2, act=cfg.act, style=cfg.mlp_style, hint=hint)
+        h = h + jnp.tanh(p["gate_mlp"]).astype(m.dtype) * m
+        return h, {"k": ctx_kv[0], "v": ctx_kv[1]}, _NO_METRICS
+    if kind == "dec":
+        ctx_kv = attn_mod.cross_kv(p["xattn"], ctx, cfg)
+        x = apply_norm(h, p["ln1"], **n)
+        a, (k, v) = attn_mod.gqa_attn(p["attn"], x, cfg, positions=positions,
+                                      hint=hint, chunk=cfg.blockwise_chunk)
+        h = h + a
+        x = apply_norm(h, p["ln_x"], **n)
+        h = h + attn_mod.cross_attn(p["xattn"], x, ctx_kv, cfg, hint=hint)
+        x2 = apply_norm(h, p["ln2"], **n)
+        h = h + apply_mlp(p["mlp"], x2, act=cfg.act, style=cfg.mlp_style, hint=hint)
+        return h, {"k": k, "v": v, "xk": ctx_kv[0], "xv": ctx_kv[1]}, _NO_METRICS
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def init_block_cache(kind: str, cfg, batch: int, cache_len: int, dtype,
+                     ctx_len: int | None = None) -> dict | None:
+    """Zero/empty cache entry for one layer of `kind`."""
+    g, hd = cfg.n_kv_heads, cfg.head_dim
+    if kind in ("attn", "enc", "moe"):
+        return {"k": jnp.zeros((batch, cache_len, g, hd), dtype),
+                "v": jnp.zeros((batch, cache_len, g, hd), dtype)}
+    if kind in ("mla", "mla_moe"):
+        m = cfg.mla
+        return {"ckv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+                "kr": jnp.zeros((batch, cache_len, m.qk_rope_dim), dtype)}
+    if kind == "mamba":
+        return ssm_mod.init_mamba2_state(cfg, batch)
+    if kind == "mlstm":
+        return xlstm_mod.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm_mod.init_slstm_state(cfg, batch)
+    if kind == "xattn":
+        # static cross-KV; filled at prefill from image embeddings
+        n_img = ctx_len or cfg.n_image_tokens
+        return {"k": jnp.zeros((batch, n_img, g, hd), dtype),
+                "v": jnp.zeros((batch, n_img, g, hd), dtype)}
+    if kind == "dec":
+        t_enc = ctx_len or cache_len
+        return {"k": jnp.zeros((batch, cache_len, g, hd), dtype),
+                "v": jnp.zeros((batch, cache_len, g, hd), dtype),
+                "xk": jnp.zeros((batch, t_enc, g, hd), dtype),
+                "xv": jnp.zeros((batch, t_enc, g, hd), dtype)}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Decode apply. Returns (h, new_cache_entry).
+# ---------------------------------------------------------------------------
+
+def apply_block_decode(kind: str, p: dict, h: Array, cfg, *, cache, pos, kv_pos,
+                       kv_valid, hint=lambda a, *_: a) -> tuple[Array, dict]:
+    n = _norm(cfg)
+    if kind in ("attn", "moe", "mla", "mla_moe", "dec"):
+        x = apply_norm(h, p["ln1"], **n)
+        if kind in ("mla", "mla_moe"):
+            a, (ckv, kr) = attn_mod.mla_decode(p["attn"], x, cfg, cache_ckv=cache["ckv"],
+                                               cache_kr=cache["kr"], pos=pos, kv_pos=kv_pos,
+                                               kv_valid=kv_valid)
+            new_cache = {"ckv": ckv, "kr": kr}
+        else:
+            a, (ck, cv) = attn_mod.gqa_decode(p["attn"], x, cfg, cache_k=cache["k"],
+                                              cache_v=cache["v"], pos=pos, kv_pos=kv_pos,
+                                              kv_valid=kv_valid)
+            new_cache = dict(cache, k=ck, v=cv)
+        h = h + a
+        if kind == "dec":
+            x = apply_norm(h, p["ln_x"], **n)
+            h = h + attn_mod.cross_attn(p["xattn"], x, (cache["xk"], cache["xv"]), cfg, hint=hint)
+        if kind in ("moe", "mla_moe"):
+            x2 = apply_norm(h, p["ln2"], **n)
+            mo, _ = moe_mod.moe_ffn(p["moe"], x2, cfg,
+                                    capacity_factor=cfg.moe.decode_capacity_factor, hint=hint)
+            if "dense_mlp" in p:
+                xd = apply_norm(h, p["ln_dense"], **n)
+                mo = mo + apply_mlp(p["dense_mlp"], xd, act=cfg.act, style=cfg.mlp_style, hint=hint)
+            h = h + mo
+        else:
+            x2 = apply_norm(h, p["ln2"], **n)
+            h = h + apply_mlp(p["mlp"], x2, act=cfg.act, style=cfg.mlp_style, hint=hint)
+        return h, new_cache
+    if kind == "mamba":
+        x = apply_norm(h, p["ln1"], **n)
+        y, new = ssm_mod.mamba2_decode(p["mixer"], x, cfg, state=cache)
+        return h + y, new
+    if kind == "mlstm":
+        x = apply_norm(h, p["ln1"], **n)
+        y, new = xlstm_mod.mlstm_block_decode(p["cell"], x, cfg, state=cache)
+        return h + y, new
+    if kind == "slstm":
+        x = apply_norm(h, p["ln1"], **n)
+        y, new = xlstm_mod.slstm_block_decode(p["cell"], x, cfg, state=cache)
+        return h + y, new
+    if kind == "xattn":
+        x = apply_norm(h, p["ln1"], **n)
+        h = h + attn_mod.cross_attn(p["attn"], x, (cache["k"], cache["v"]), cfg, hint=hint)
+        x2 = apply_norm(h, p["ln2"], **n)
+        m = apply_mlp(p["mlp"], x2, act=cfg.act, style=cfg.mlp_style, hint=hint)
+        return h + jnp.tanh(p["gate_mlp"]).astype(m.dtype) * m, cache
+    raise ValueError(kind)

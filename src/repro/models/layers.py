@@ -1,0 +1,189 @@
+"""Shared neural-net primitives: norms, activations, RoPE, embeddings, losses.
+
+All model code in this package is written as pure functions over parameter
+pytrees (nested dicts of jax.Array). Sharding is applied externally through
+`repro.sharding.rules`; functions here only do math and the occasional
+`with_sharding_constraint` hint through the `hint` callback.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# dtype helpers
+# ---------------------------------------------------------------------------
+
+def promote_fp32(fn):
+    """Run `fn` in fp32 and cast back to the input dtype."""
+
+    def wrapped(x, *args, **kwargs):
+        dtype = x.dtype
+        return fn(x.astype(jnp.float32), *args, **kwargs).astype(dtype)
+
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, *, eps: float = 1e-6, gemma_style: bool = False) -> Array:
+    """RMSNorm, computed in fp32. gemma_style applies (1 + w) scaling."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = scale.astype(jnp.float32)
+    if gemma_style:
+        w = 1.0 + w
+    return (y * w).astype(dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, *, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(x: Array, p: dict, *, eps: float, kind: str = "rms", gemma_style: bool = False) -> Array:
+    if kind == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], eps=eps)
+    return rms_norm(x, p["scale"], eps=eps, gemma_style=gemma_style)
+
+
+def init_norm(d: int, *, kind: str = "rms", gemma_style: bool = False) -> dict:
+    # gemma stores (w) with effective scale (1+w) -> init 0; plain RMS init 1.
+    scale = jnp.zeros((d,), jnp.float32) if gemma_style else jnp.ones((d,), jnp.float32)
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": scale}
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+ACTIVATIONS: dict[str, Callable[[Array], Array]] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "gelu_exact": lambda x: jax.nn.gelu(x, approximate=False),
+    "relu": jax.nn.relu,
+}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (half-rotation layout)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(rotary_dim: int, *, theta: float) -> Array:
+    """Inverse frequencies, shape (rotary_dim // 2,) in fp32."""
+    exponent = jnp.arange(0, rotary_dim, 2, dtype=jnp.float32) / rotary_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: Array, positions: Array, *, theta: float, rotary_dim: int | None = None) -> Array:
+    """Apply RoPE.
+
+    x: (..., S, H, head_dim) — rotates the first `rotary_dim` channels.
+    positions: broadcastable to (..., S); absolute token positions.
+    """
+    head_dim = x.shape[-1]
+    rd = rotary_dim if rotary_dim is not None else head_dim
+    inv_freq = rope_frequencies(rd, theta=theta)  # (rd//2,)
+    # angles: (..., S, 1, rd//2)
+    ang = positions.astype(jnp.float32)[..., None, None] * inv_freq
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1) if rd < head_dim else out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / embedding initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, shape: tuple[int, ...], *, dtype, scale: float | None = None) -> Array:
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[0] if len(shape) <= 2 else math.prod(shape[:-1])
+    std = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: Array, vocab: int, d: int, *, dtype) -> Array:
+    return (jax.random.truncated_normal(key, -3.0, 3.0, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def linear(x: Array, w: Array, b: Array | None = None) -> Array:
+    y = x @ w
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: Array, d: int, f: int, *, style: str, dtype) -> dict:
+    """style: 'glu' (gate+up+down) or 'plain' (up+down, optional bias)."""
+    ks = jax.random.split(key, 3)
+    if style == "glu":
+        return {
+            "w_gate": dense_init(ks[0], (d, f), dtype=dtype),
+            "w_up": dense_init(ks[1], (d, f), dtype=dtype),
+            "w_down": dense_init(ks[2], (f, d), dtype=dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d, f), dtype=dtype),
+        "b_up": jnp.zeros((f,), jnp.float32),
+        "w_down": dense_init(ks[1], (f, d), dtype=dtype),
+        "b_down": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def apply_mlp(p: dict, x: Array, *, act: str, style: str, hint=lambda a, *_: a) -> Array:
+    a = ACTIVATIONS[act]
+    if style == "glu":
+        h = a(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = hint(h, "ffn")
+        return h @ p["w_down"]
+    h = a(linear(x, p["w_up"], p["b_up"]))
+    h = hint(h, "ffn")
+    return linear(h, p["w_down"], p["b_down"])
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy loss over (possibly vocab-sharded) logits
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: Array, labels: Array, *, z_loss: float = 0.0) -> tuple[Array, dict]:
+    """Mean cross-entropy. logits (..., V) any float dtype; labels (...) int.
+
+    Stable fp32 reduction; SPMD inserts the V-axis collectives when logits
+    are vocab-sharded.
+    """
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    shifted = lf - m
+    sum_exp = jnp.sum(jnp.exp(shifted), axis=-1)
+    lse = jnp.log(sum_exp) + m[..., 0]
+    ll = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - ll
+    loss = jnp.mean(nll)
+    metrics = {"nll": loss}
+    if z_loss:
+        zl = z_loss * jnp.mean(jnp.square(lse))
+        loss = loss + zl
+        metrics["z_loss"] = zl
+    return loss, metrics

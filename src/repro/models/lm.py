@@ -1,0 +1,261 @@
+"""Top-level language model: embeddings, scanned layer groups, heads.
+
+Three entry points (all pure functions over a params pytree):
+  forward(params, cfg, batch)            -> (logits, metrics)        [train]
+  prefill(params, cfg, batch)            -> (last_logits, cache)     [serving]
+  decode_step(params, cfg, tokens, cache, pos) -> (logits, cache)    [serving]
+
+Layers are grouped into homogeneous runs (cfg.blocks, run-length encoded);
+each run's parameters are stacked on a leading axis and executed with
+jax.lax.scan — keeping HLO size O(#groups), which is what makes lowering
+61–80 layer models with 512-way SPMD tractable.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks as blocks_mod
+from .layers import apply_norm, embed_init, init_norm, dense_init
+
+Array = jax.Array
+
+NO_HINT = lambda a, *_: a
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key, cfg) -> dict:
+    keys = jax.random.split(key, 8)
+    params: dict = {"embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype=cfg.param_dtype)}
+    gk = jax.random.split(keys[1], max(len(cfg.blocks), 1))
+    groups = []
+    for gi, (kind, count) in enumerate(cfg.blocks):
+        lk = jax.random.split(gk[gi], count)
+        groups.append(_stack([blocks_mod.init_block(lk[i], kind, cfg) for i in range(count)]))
+    params["groups"] = groups
+    params["final_norm"] = init_norm(cfg.d_model, kind=cfg.norm, gemma_style=cfg.gemma_norm)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[2], (cfg.d_model, cfg.vocab_size), dtype=cfg.param_dtype, scale=0.02)
+    if cfg.shared_attn_every:
+        params["shared_block"] = blocks_mod.init_block(keys[3], "attn", cfg)
+    if cfg.encdec:
+        ek = jax.random.split(keys[4], 2)
+        params["encoder"] = {
+            "groups": [_stack([blocks_mod.init_block(k, "enc", cfg)
+                               for k in jax.random.split(ek[0], cfg.n_enc_layers)])],
+            "final_norm": init_norm(cfg.d_model, kind=cfg.norm, gemma_style=cfg.gemma_norm),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _head(params, cfg, h):
+    h = apply_norm(h, params["final_norm"], kind=cfg.norm, eps=cfg.norm_eps, gemma_style=cfg.gemma_norm)
+    if cfg.tie_embeddings:
+        return h @ params["embed"].T
+    return h @ params["lm_head"]
+
+
+def _scan_group(kind, gparams, h, cfg, *, positions, ctx, hint, want_cache: bool):
+    def body(carry, p):
+        hh = carry
+        h2, cache, metrics = blocks_mod.apply_block(kind, p, hh, cfg, positions=positions,
+                                                    ctx=ctx, hint=hint)
+        h2 = hint(h2, "act")
+        out = (cache if want_cache else None,
+               {k: v for k, v in metrics.items()} if metrics else None)
+        return h2, out
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, (caches, metrics) = jax.lax.scan(body_fn, h, gparams)
+    return h, caches, metrics
+
+
+def _run_encoder(params, cfg, frames, *, hint):
+    h = frames.astype(cfg.param_dtype)
+    positions = jnp.arange(frames.shape[1])[None, :]
+    for gparams in params["encoder"]["groups"]:
+        h, _, _ = _scan_group("enc", gparams, h, cfg, positions=positions, ctx=None, hint=hint,
+                              want_cache=False)
+    return apply_norm(h, params["encoder"]["final_norm"], kind=cfg.norm, eps=cfg.norm_eps,
+                      gemma_style=cfg.gemma_norm)
+
+
+def _context(params, cfg, batch, hint):
+    """Cross-attention context: image embeddings (VLM) or encoder output."""
+    if cfg.encdec:
+        return _run_encoder(params, cfg, batch["audio_frames"], hint=hint)
+    if cfg.cross_attn_layers or any(k == "xattn" for k, _ in cfg.blocks):
+        return batch["image_embeds"].astype(cfg.param_dtype)
+    return None
+
+
+def _merge_metrics(all_metrics: list) -> dict:
+    agg: dict = {}
+    for m in all_metrics:
+        if not m:
+            continue
+        for k, v in m.items():
+            # v is stacked over layers in the group
+            red = jnp.mean(v, axis=0) if v.ndim >= 1 else v
+            if k in ("moe_aux", "moe_z", "moe_drop_frac"):
+                red = jnp.mean(v)
+            agg[k] = agg.get(k, 0.0) + red
+    return agg
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg, batch: dict, *, hint=NO_HINT) -> tuple[Array, dict]:
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = _embed(params, cfg, tokens)
+    h = hint(h, "act")
+    positions = jnp.arange(S)[None, :]
+    ctx = _context(params, cfg, batch, hint)
+    metrics_list = []
+    for (kind, _), gparams in zip(cfg.blocks, params["groups"]):
+        h, _, metrics = _scan_group(kind, gparams, h, cfg, positions=positions, ctx=ctx, hint=hint,
+                                    want_cache=False)
+        metrics_list.append(metrics)
+        if cfg.shared_attn_every:
+            h2, _, _ = blocks_mod.apply_block("attn", params["shared_block"], h, cfg,
+                                              positions=positions, ctx=None, hint=hint)
+            h = h2
+    logits = _head(params, cfg, h)
+    return logits, _merge_metrics(metrics_list)
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward + cache extraction
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg, batch: dict, *, hint=NO_HINT) -> tuple[Array, dict]:
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = _embed(params, cfg, tokens)
+    h = hint(h, "act")
+    positions = jnp.arange(S)[None, :]
+    ctx = _context(params, cfg, batch, hint)
+    cache: dict = {"groups": [], "shared": [], "pos": jnp.asarray(S, jnp.int32)}
+    for (kind, _), gparams in zip(cfg.blocks, params["groups"]):
+        h, caches, _ = _scan_group(kind, gparams, h, cfg, positions=positions, ctx=ctx, hint=hint,
+                                   want_cache=True)
+        cache["groups"].append(caches)
+        if cfg.shared_attn_every:
+            h, c_sh, _ = blocks_mod.apply_block("attn", params["shared_block"], h, cfg,
+                                                positions=positions, ctx=None, hint=hint)
+            cache["shared"].append(c_sh)
+    if ctx is not None:
+        cache["ctx"] = ctx
+    logits = _head(params, cfg, h[:, -1:, :])
+    return logits[:, 0, :], cache
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def ring_positions(pos: Array, cache_len: int):
+    """Absolute position held by each ring-buffer slot *after* writing `pos`.
+
+    slot(i) holds the largest position p <= pos with p % cache_len == i.
+    Slots with p > pos have not been written this lap: they hold p - cache_len
+    (valid only if >= 0). Works for the full-cache case too (cache_len >= S).
+    """
+    i = jnp.arange(cache_len)
+    lap = pos - ((pos - i) % cache_len)
+    valid = lap >= 0
+    kv_pos = jnp.where(valid, lap, 2**30)
+    return kv_pos, valid
+
+
+def decode_step(params, cfg, tokens: Array, cache: dict, *, hint=NO_HINT) -> tuple[Array, dict]:
+    """tokens (B, 1) — append one token at absolute position cache['pos']."""
+    pos = cache["pos"]
+    B = tokens.shape[0]
+    h = _embed(params, cfg, tokens)
+    new_cache: dict = {"groups": [], "shared": [], "pos": pos + 1}
+    if "ctx" in cache:
+        new_cache["ctx"] = cache["ctx"]
+    shared_i = 0
+    for gi, ((kind, _), gparams) in enumerate(zip(cfg.blocks, params["groups"])):
+        gcache = cache["groups"][gi]
+        cache_len = _group_cache_len(kind, gcache)
+        kv_pos, kv_valid = (ring_positions(pos, cache_len) if cache_len else (None, None))
+
+        def body(carry, xs):
+            hh = carry
+            p, c = xs
+            h2, c2 = blocks_mod.apply_block_decode(kind, p, hh, cfg, cache=c, pos=pos,
+                                                   kv_pos=kv_pos, kv_valid=kv_valid, hint=hint)
+            return h2, c2
+
+        h, new_gcache = jax.lax.scan(body, h, (gparams, gcache))
+        new_cache["groups"].append(new_gcache)
+        if cfg.shared_attn_every:
+            sc = cache["shared"][shared_i]
+            slen = sc["k"].shape[1]
+            sp, sv = ring_positions(pos, slen)
+            h, sc2 = blocks_mod.apply_block_decode("attn", params["shared_block"], h, cfg,
+                                                   cache=sc, pos=pos, kv_pos=sp, kv_valid=sv, hint=hint)
+            new_cache["shared"].append(sc2)
+            shared_i += 1
+    logits = _head(params, cfg, h)
+    return logits[:, 0, :], new_cache
+
+
+def _group_cache_len(kind: str, gcache) -> int | None:
+    if kind in ("attn", "moe", "enc", "dec"):
+        return gcache["k"].shape[2]  # (L, B, T, G, hd) stacked on layer axis
+    if kind in ("mla", "mla_moe"):
+        return gcache["ckv"].shape[2]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Cache init (for dry-run decode specs and for the serving engine)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, cache_len: int, *, ctx_len: int | None = None,
+               dtype=None) -> dict:
+    dtype = dtype or cfg.param_dtype
+    cache: dict = {"groups": [], "shared": [], "pos": jnp.asarray(0, jnp.int32)}
+    window_len = min(cache_len, cfg.window) if cfg.window else cache_len
+    for kind, count in cfg.blocks:
+        clen = window_len if kind in ("attn", "moe", "dec") else cache_len
+        entries = [blocks_mod.init_block_cache(kind, cfg, batch, clen, dtype, ctx_len=ctx_len)
+                   for _ in range(count)]
+        cache["groups"].append(_stack(entries))
+    if cfg.shared_attn_every:
+        n_apps = len(cfg.blocks)
+        shared_len = min(cache_len, 4096)  # windowed shared-attn cache (see DESIGN §4)
+        for _ in range(n_apps):
+            cache["shared"].append(blocks_mod.init_block_cache("attn", cfg, batch, shared_len, dtype))
+    if ctx_len and not cfg.encdec:
+        cache["ctx"] = jnp.zeros((batch, ctx_len, cfg.d_model), dtype)
+    if cfg.encdec and ctx_len:
+        cache["ctx"] = jnp.zeros((batch, ctx_len, cfg.d_model), dtype)
+    return cache

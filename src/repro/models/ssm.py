@@ -1,0 +1,169 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) mixer in pure JAX.
+
+Chunked semiseparable algorithm: within-chunk quadratic attention-like term
+plus inter-chunk recurrent state carried by a lax.scan. O(S * L) time with
+chunk length L, O(H * N * P) recurrent state — this is what makes the
+`long_500k` decode shape feasible for hybrid/SSM architectures.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+
+Array = jax.Array
+
+
+def init_mamba2(key, cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.d_inner
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + s.n_heads
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    # dt_bias init so softplus(dt_bias) spans [dt_min, dt_max] (mamba2 default)
+    u = jax.random.uniform(ks[2], (s.n_heads,), jnp.float32)
+    dt_init = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], (d, d_in_proj), dtype=dt),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_dim), dtype=dt, scale=1.0 / math.sqrt(s.d_conv)),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, s.n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((s.n_heads,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": {"scale": jnp.ones((d_inner,), jnp.float32)},
+        "out_proj": dense_init(ks[3], (d_inner, d), dtype=dt,
+                               scale=1.0 / math.sqrt(d_inner * 2 * cfg.n_layers)),
+    }
+
+
+def _split_in_proj(p, x, s):
+    zxbcdt = x @ p["in_proj"]
+    d_inner, gn = s.d_inner, s.n_groups * s.d_state
+    z, xs, B, C, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + gn, 2 * d_inner + 2 * gn], axis=-1)
+    return z, xs, B, C, dt
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over (B, S, Cdim) with taps (K, Cdim)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return jax.nn.silu(out + b.astype(out.dtype))
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int, init_state=None):
+    """SSD chunked scan.
+
+    x (B,S,H,P); dt (B,S,H) positive; A (H,) negative; Bm/Cm (B,S,G,N).
+    Returns y (B,S,H,P), final_state (B,H,N,P).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    L = min(chunk, S)
+    nc = -(-S // L)
+    pad = nc * L - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    xc = x.reshape(Bsz, nc, L, H, P)
+    dtc = dt.reshape(Bsz, nc, L, H).astype(jnp.float32)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, L, G, N), rep, axis=3).astype(jnp.float32)
+    Cc = jnp.repeat(Cm.reshape(Bsz, nc, L, G, N), rep, axis=3).astype(jnp.float32)
+
+    dA = dtc * A[None, None, None, :]                  # (B,nc,L,H) log-decay
+    cum = jnp.cumsum(dA, axis=2)                       # inclusive cumsum
+    # intra-chunk: scores[b,c,h,i,j] = exp(cum_i - cum_j) (C_i . B_j) dt_j, j<=i
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,nc,L,L,H) i,j
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(mask[None, None, :, :, None], decay, -jnp.inf)
+    cb = jnp.einsum("bclhn,bcjhn->bcljh", Cc, Bc)                  # i=l, j
+    scores = jnp.exp(decay.transpose(0, 1, 2, 3, 4)) * cb.transpose(0, 1, 2, 3, 4)
+    scores = scores * dtc[:, :, None, :, :]                        # dt_j -> (B,nc,i,j,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xc.astype(jnp.float32))
+
+    # per-chunk end state: sum_j exp(cum_L - cum_j) dt_j B_j (x)ᵀ
+    rdec = jnp.exp(cum[:, :, -1:, :] - cum)                        # (B,nc,L,H)
+    st = jnp.einsum("bclh,bclhn,bclhp->bchnp", rdec * dtc, Bc, xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                        # (B,nc,H)
+
+    s0 = jnp.zeros((Bsz, H, N, P), jnp.float32) if init_state is None else init_state.astype(jnp.float32)
+
+    def body(carry, xs):
+        st_c, dec_c = xs  # (B,H,N,P), (B,H)
+        new = carry * dec_c[:, :, None, None] + st_c
+        return new, carry  # emit state *entering* this chunk
+
+    final, prev_states = jax.lax.scan(body, s0, (st.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)             # (B,nc,H,N,P)
+
+    # inter-chunk: y_i += exp(cum_i) C_i . S_prev
+    inter = jnp.einsum("bclhn,bchnp->bclhp", Cc * jnp.exp(cum)[..., None], prev_states)
+    y = (y_intra + inter).reshape(Bsz, nc * L, H, P)[:, :S]
+    return y.astype(x.dtype), final
+
+
+def mamba2_mixer(p, x, cfg, *, hint=lambda a, *_: a):
+    """Full-sequence Mamba2 mixer: x (B,S,D) -> (y (B,S,D), final_states)."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    z, xs, Bm, Cm, dt = _split_in_proj(p, x, s)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_tail = xbc[:, S - (s.d_conv - 1):, :].astype(jnp.float32)  # decode handoff
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"]).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(xbc, [s.d_inner, s.d_inner + s.n_groups * s.d_state], axis=-1)
+    H, P, N = s.n_heads, s.head_dim, s.d_state
+    xh = hint(xs.reshape(B, S, H, P), "ssm_heads")
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, fin = ssd_scan(xh, dtp, A, Bm.reshape(B, S, s.n_groups, N), Cm.reshape(B, S, s.n_groups, N),
+                      chunk=s.chunk)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, s.d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"]["scale"], eps=cfg.norm_eps)
+    return y @ p["out_proj"], {"ssm": fin, "conv": conv_tail}
+
+
+def init_mamba2_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    conv_dim = s.d_inner + 2 * s.n_groups * s.d_state
+    return {
+        "ssm": jnp.zeros((batch, s.n_heads, s.d_state, s.head_dim), dtype),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_decode(p, x, cfg, *, state: dict):
+    """Single-token decode. x (B,1,D); state {'ssm': (B,H,N,P), 'conv': (B,K-1,C)}."""
+    s = cfg.ssm
+    B = x.shape[0]
+    z, xs, Bm, Cm, dt = _split_in_proj(p, x, s)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)                   # (B,1,C)
+    window = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)  # (B,K,C)
+    w = p["conv_w"]
+    out = jnp.einsum("bkc,kc->bc", window, w)[:, None, :]
+    xbc_c = jax.nn.silu(out + p["conv_b"].astype(out.dtype)).astype(x.dtype)
+    new_conv = window[:, 1:, :].astype(state["conv"].dtype)
+    xs_c, Bm_c, Cm_c = jnp.split(xbc_c, [s.d_inner, s.d_inner + s.n_groups * s.d_state], axis=-1)
+    H, P, N = s.n_heads, s.head_dim, s.d_state
+    xh = xs_c.reshape(B, H, P).astype(jnp.float32)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]       # (B,H)
+    A = -jnp.exp(p["A_log"])
+    Bv = jnp.repeat(Bm_c.reshape(B, s.n_groups, N), H // s.n_groups, axis=1).astype(jnp.float32)
+    Cv = jnp.repeat(Cm_c.reshape(B, s.n_groups, N), H // s.n_groups, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dtp * A[None, :])                              # (B,H)
+    new_ssm = state["ssm"].astype(jnp.float32) * decay[:, :, None, None] + \
+        jnp.einsum("bh,bhn,bhp->bhnp", dtp, Bv, xh)
+    y = jnp.einsum("bhn,bhnp->bhp", Cv, new_ssm) + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, s.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"]["scale"], eps=cfg.norm_eps)
+    return y @ p["out_proj"], {"ssm": new_ssm.astype(state["ssm"].dtype), "conv": new_conv}

@@ -1,0 +1,277 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential scan), with exponential gating and
+log-space stabilization.
+
+mLSTM uses a chunkwise-parallel formulation (GLA/SSD-style): within-chunk
+quadratic term + inter-chunk recurrent (C, n, m) state — validated against
+the naive per-step recurrence in tests/test_xlstm.py.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+
+Array = jax.Array
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel
+# ---------------------------------------------------------------------------
+
+def mlstm_chunkwise(q, k, v, logi, logf, *, chunk: int, state=None):
+    """q,k,v: (B,S,NH,DH); logi/logf: (B,S,NH) log input/forget gates.
+
+    Returns h (B,S,NH,DH) and final state dict {C (B,NH,DH,DH), n (B,NH,DH),
+    m (B,NH)} (stabilized: stored C,n carry implicit scale exp(m)).
+    """
+    B, S, NH, DH = q.shape
+    L = min(chunk, S)
+    nc = -(-S // L)
+    pad = nc * L - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)), constant_values=NEG)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+
+    qf = (q.astype(jnp.float32) / math.sqrt(DH)).reshape(B, nc, L, NH, DH)
+    kf = k.astype(jnp.float32).reshape(B, nc, L, NH, DH)
+    vf = v.astype(jnp.float32).reshape(B, nc, L, NH, DH)
+    li = logi.astype(jnp.float32).reshape(B, nc, L, NH)
+    lf = logf.astype(jnp.float32).reshape(B, nc, L, NH)
+    b = jnp.cumsum(lf, axis=2)                                     # inclusive
+
+    if state is None:
+        C0 = jnp.zeros((B, NH, DH, DH), jnp.float32)
+        n0 = jnp.zeros((B, NH, DH), jnp.float32)
+        m0 = jnp.full((B, NH), NEG, jnp.float32)
+    else:
+        C0, n0, m0 = (state["C"].astype(jnp.float32), state["n"].astype(jnp.float32),
+                      state["m"].astype(jnp.float32))
+
+    # intra-chunk log weights D_ij = b_i - b_j + logi_j  (j <= i)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    D = b[:, :, :, None, :] - b[:, :, None, :, :] + li[:, :, None, :, :]   # (B,nc,i,j,NH)
+    D = jnp.where(tri[None, None, :, :, None], D, NEG)
+
+    def body(carry, xs):
+        C, n, m = carry                                           # stabilized state
+        qc, kc, vc, Dc, bc, lic = xs                              # per-chunk
+        g = bc + m[:, None, :]                                    # (B,L,NH) inter log-scale
+        m_i = jnp.maximum(jnp.max(Dc, axis=2), g)                 # (B,i,NH) (max over j)
+        w_intra = jnp.exp(Dc - m_i[:, :, None, :])                # (B,i,j,NH)
+        w_inter = jnp.exp(g - m_i)                                # (B,i,NH)
+        qk = jnp.einsum("bihd,bjhd->bijh", qc, kc)                # (B,i,j,NH)
+        num = jnp.einsum("bijh,bijh,bjhd->bihd", w_intra, qk, vc)
+        # inter: trueC0 @ q  (contract q with C's key index, matching mlstm_step)
+        num = num + w_inter[..., None] * jnp.einsum("bhde,bihe->bihd", C, qc)
+        den = jnp.einsum("bijh,bijh->bih", w_intra, qk) + w_inter * jnp.einsum("bihd,bhd->bih", qc, n)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_i))
+        h = num / den[..., None]
+        # ---- state update to end of chunk ----
+        bL = bc[:, -1, :]                                         # (B,NH)
+        dj = bL[:, None, :] - bc + lic                            # (B,j,NH)
+        m_new = jnp.maximum(bL + m, jnp.max(dj, axis=1))
+        scale_old = jnp.exp(bL + m - m_new)
+        wj = jnp.exp(dj - m_new[:, None, :])                      # (B,j,NH)
+        C_new = scale_old[:, :, None, None] * C + jnp.einsum("bjh,bjhd,bjhe->bhde", wj, vc, kc)
+        n_new = scale_old[:, :, None] * n + jnp.einsum("bjh,bjhd->bhd", wj, kc)
+        return (C_new, n_new, m_new), h
+
+    xs = (qf.transpose(1, 0, 2, 3, 4), kf.transpose(1, 0, 2, 3, 4), vf.transpose(1, 0, 2, 3, 4),
+          D.transpose(1, 0, 2, 3, 4), b.transpose(1, 0, 2, 3), li.transpose(1, 0, 2, 3))
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, nc * L, NH, DH)[:, :S]
+    return h.astype(q.dtype), {"C": C, "n": n, "m": m}
+
+
+def mlstm_step(q, k, v, logi, logf, state):
+    """Single-token recurrence. q,k,v (B,NH,DH); logi/logf (B,NH)."""
+    DH = q.shape[-1]
+    qf = q.astype(jnp.float32) / math.sqrt(DH)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C, n, m = state["C"].astype(jnp.float32), state["n"].astype(jnp.float32), state["m"].astype(jnp.float32)
+    li, lf = logi.astype(jnp.float32), logf.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, li)
+    fs = jnp.exp(lf + m - m_new)
+    is_ = jnp.exp(li - m_new)
+    C_new = fs[..., None, None] * C + is_[..., None, None] * jnp.einsum("bhd,bhe->bhde", vf, kf)
+    n_new = fs[..., None] * n + is_[..., None] * kf
+    num = jnp.einsum("bhde,bhe->bhd", C_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, qf)), jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(q.dtype)
+    return h, {"C": C_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (up-proj, causal conv, qkv, gates, out gate, down-proj)
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(key, cfg) -> dict:
+    x = cfg.xlstm
+    d = cfg.d_model
+    di = x.d_inner_m                        # proj_factor * d
+    NH, DH = x.n_heads, x.d_inner_m // x.n_heads
+    ks = jax.random.split(key, 7)
+    dt = cfg.param_dtype
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * di), dtype=dt),
+        "conv_w": dense_init(ks[1], (x.d_conv, di), dtype=dt, scale=1.0 / math.sqrt(x.d_conv)),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "w_q": dense_init(ks[2], (di, di), dtype=dt),
+        "w_k": dense_init(ks[3], (di, di), dtype=dt),
+        "w_v": dense_init(ks[4], (di, di), dtype=dt),
+        "w_if": dense_init(ks[5], (di, 2 * NH), dtype=jnp.float32, scale=0.02),
+        "b_i": jnp.full((NH,), -10.0, jnp.float32),   # paper: negative init
+        "b_f": jnp.linspace(3.0, 6.0, NH, dtype=jnp.float32),
+        "norm": {"scale": jnp.ones((di,), jnp.float32)},
+        "w_down": dense_init(ks[6], (di, d), dtype=dt, scale=1.0 / math.sqrt(di * 2 * cfg.n_layers)),
+    }
+
+
+def _mlstm_qkv_gates(p, xc, xraw, NH, DH):
+    """xc: conv'd branch (B,*,di); xraw: pre-conv branch for v."""
+    q = (xc @ p["w_q"]).reshape(*xc.shape[:-1], NH, DH)
+    k = (xc @ p["w_k"]).reshape(*xc.shape[:-1], NH, DH)
+    v = (xraw @ p["w_v"]).reshape(*xraw.shape[:-1], NH, DH)
+    gates = xc.astype(jnp.float32) @ p["w_if"]
+    gi, gf = jnp.split(gates, 2, axis=-1)
+    logi = gi + p["b_i"]
+    logf = jax.nn.log_sigmoid(gf + p["b_f"])
+    return q, k, v, logi, logf
+
+
+def mlstm_block(p, x, cfg, *, hint=lambda a, *_: a, state=None, return_state=False):
+    """x (B,S,D) -> (B,S,D). Full-sequence (chunkwise) path."""
+    xl = cfg.xlstm
+    B, S, D = x.shape
+    NH, DH = xl.n_heads, xl.d_inner_m // xl.n_heads
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    from .ssm import _causal_conv
+    conv_tail = xm[:, S - (xl.d_conv - 1):, :].astype(jnp.float32)
+    xc = _causal_conv(xm, p["conv_w"], p["conv_b"]).astype(x.dtype)
+    q, k, v, logi, logf = _mlstm_qkv_gates(p, xc, xm, NH, DH)
+    h, fin = mlstm_chunkwise(q, k, v, logi, logf,
+                             chunk=xl.chunk, state={k2: state[k2] for k2 in ("C", "n", "m")} if state else None)
+    fin["conv"] = conv_tail
+    h = h.reshape(B, S, xl.d_inner_m)
+    h = rms_norm(h, p["norm"]["scale"], eps=cfg.norm_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    out = h @ p["w_down"]
+    return out, fin
+
+
+def init_mlstm_state(cfg, batch: int) -> dict:
+    xl = cfg.xlstm
+    NH, DH = xl.n_heads, xl.d_inner_m // xl.n_heads
+    di = xl.d_inner_m
+    return {
+        "C": jnp.zeros((batch, NH, DH, DH), jnp.float32),
+        "n": jnp.zeros((batch, NH, DH), jnp.float32),
+        "m": jnp.full((batch, NH), NEG, jnp.float32),
+        "conv": jnp.zeros((batch, xl.d_conv - 1, di), jnp.float32),
+    }
+
+
+def mlstm_block_decode(p, x, cfg, *, state):
+    xl = cfg.xlstm
+    B = x.shape[0]
+    NH, DH = xl.n_heads, xl.d_inner_m // xl.n_heads
+    up = x @ p["w_up"]                                           # (B,1,2di)
+    xm, z = jnp.split(up, 2, axis=-1)
+    window = jnp.concatenate([state["conv"].astype(xm.dtype), xm], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"])[:, None, :]
+    xc = jax.nn.silu(conv + p["conv_b"].astype(conv.dtype)).astype(x.dtype)
+    q, k, v, logi, logf = _mlstm_qkv_gates(p, xc[:, 0], xm[:, 0], NH, DH)
+    h, new = mlstm_step(q, k, v, logi, logf, state)
+    h = h.reshape(B, 1, xl.d_inner_m)
+    h = rms_norm(h, p["norm"]["scale"], eps=cfg.norm_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    new["conv"] = window[:, 1:, :].astype(state["conv"].dtype)
+    return h @ p["w_down"], new
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (sequential scan; block-diagonal recurrent weights per head)
+# ---------------------------------------------------------------------------
+
+def init_slstm_block(key, cfg) -> dict:
+    x = cfg.xlstm
+    d = cfg.d_model
+    NH, DH = x.n_heads, d // x.n_heads
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    f_up = int(d * 4 / 3)
+    return {
+        "w_gates": dense_init(ks[0], (d, 4 * d), dtype=dt),          # z,i,f,o pre-acts
+        "r_gates": dense_init(ks[1], (4, NH, DH, DH), dtype=jnp.float32, scale=1.0 / math.sqrt(DH)),
+        "b_gates": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                                    jnp.broadcast_to(jnp.linspace(3.0, 6.0, NH)[:, None], (NH, DH)).reshape(-1),
+                                    jnp.zeros((d,), jnp.float32)]),
+        "norm": {"scale": jnp.ones((d,), jnp.float32)},
+        "ffn": {
+            "w_gate": dense_init(ks[2], (d, f_up), dtype=dt),
+            "w_up": dense_init(ks[2], (d, f_up), dtype=dt),
+            "w_down": dense_init(ks[3], (f_up, d), dtype=dt),
+        },
+    }
+
+
+def slstm_scan(p, x, cfg, *, state=None):
+    """x (B,S,D). Sequential over S. Returns (h (B,S,D), final state)."""
+    xl = cfg.xlstm
+    B, S, D = x.shape
+    NH, DH = xl.n_heads, D // xl.n_heads
+    wx = (x @ p["w_gates"] + p["b_gates"].astype(x.dtype)).astype(jnp.float32)  # (B,S,4D)
+    wx = wx.reshape(B, S, 4, NH, DH)
+    if state is None:
+        state = init_slstm_state(cfg, B)
+    R = p["r_gates"]
+
+    def step(carry, w_t):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhd,ghde->bghe", h, R)                  # (B,4,NH,DH)
+        zt, it, ft, ot = [w_t[:, i] + rec[:, i] for i in range(4)]
+        z = jnp.tanh(zt)
+        o = jax.nn.sigmoid(ot)
+        m_new = jnp.maximum(ft + m, it)
+        fs = jnp.exp(ft + m - m_new)
+        is_ = jnp.exp(it - m_new)
+        c_new = fs * c + is_ * z
+        n_new = fs * n + is_
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    carry0 = (state["c"], state["n"], state["h"], state["m"])
+    (c, n, h, m), hs = jax.lax.scan(step, carry0, wx.transpose(1, 0, 2, 3, 4))
+    out = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    return out, {"c": c, "n": n, "h": h, "m": m}
+
+
+def init_slstm_state(cfg, batch: int) -> dict:
+    xl = cfg.xlstm
+    D = cfg.d_model
+    NH, DH = xl.n_heads, D // xl.n_heads
+    z = jnp.zeros((batch, NH, DH), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z, "m": jnp.full((batch, NH, DH), -10.0, jnp.float32)}
+
+
+def slstm_block(p, x, cfg, *, hint=lambda a, *_: a, state=None, return_state=False):
+    h, fin = slstm_scan(p, x, cfg, state=state)
+    h = rms_norm(h, p["norm"]["scale"], eps=cfg.norm_eps)
+    f = p["ffn"]
+    y = jax.nn.silu(h @ f["w_gate"]) * (h @ f["w_up"])
+    return y @ f["w_down"], fin
+
+
+def slstm_block_decode(p, x, cfg, *, state):
+    out, new = slstm_block(p, x, cfg, state=state, return_state=True)
+    return out, new

@@ -1,0 +1,122 @@
+"""Optimizers as pure pytree transforms.
+
+AdamW: fp32 first/second moments (ZeRO-1-shardable — see
+sharding/rules.opt_state-specs via train/step.py).
+Adafactor: factored second moment, no first moment — the production choice
+for the 480B/671B configs where full Adam state cannot fit a single pod
+(DESIGN §5, EXPERIMENTS §Dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _decay_mask(path_names: tuple[str, ...], leaf) -> bool:
+    """True if weight decay applies: >=2D weights only, never router_bias."""
+    if "router_bias" in path_names:
+        return False
+    return leaf.ndim >= 2
+
+
+def _trainable(path_names: tuple[str, ...]) -> bool:
+    return "router_bias" not in path_names  # updated by the balance rule instead
+
+
+def _names(keypath):
+    out = []
+    for k in keypath:
+        out.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(keypath, p, g, m, v):
+        names = _names(keypath)
+        if not _trainable(names):
+            return p, m, v
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        step = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        if _decay_mask(names, p):
+            step = step + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2
+
+    out = jax.tree_util.tree_map_with_path(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": count}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, arXiv:1804.04235) — factored v, no momentum
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params):
+    flat, _ = jax.tree_util.tree_flatten(params)
+
+    def factored(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    # state "f" is a *list* parallel to the flattened params order
+    return {"f": [factored(p) for p in flat], "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, *, lr, eps=1e-30, clip=1.0, wd=0.0):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    b2 = 1.0 - c ** -0.8
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+
+    new_params, new_f = [], []
+    for (keypath, p), g, f in zip(flat_p, flat_g, state["f"]):
+        names = _names(keypath)
+        if not _trainable(names):
+            new_params.append(p)
+            new_f.append(f)
+            continue
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if p.ndim >= 2:
+            vr = b2 * f["vr"] + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc = b2 * f["vc"] + (1 - b2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            vhat = vr[..., None] * vc[..., None, :] / denom[..., None]
+            step = gf * jax.lax.rsqrt(vhat + eps)
+            newf = {"vr": vr, "vc": vc}
+        else:
+            v = b2 * f["v"] + (1 - b2) * g2
+            step = gf * jax.lax.rsqrt(v + eps)
+            newf = {"v": v}
+        # update clipping (RMS of step <= clip)
+        rms = jnp.sqrt(jnp.mean(step * step) + eps)
+        step = step / jnp.maximum(1.0, rms / clip)
+        if wd and _decay_mask(names, p):
+            step = step + wd * p.astype(jnp.float32)
+        new_params.append((p.astype(jnp.float32) - lr * step).astype(p.dtype))
+        new_f.append(newf)
+
+    return (jax.tree_util.tree_unflatten(treedef, new_params),
+            {"f": new_f, "count": count})

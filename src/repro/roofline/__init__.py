@@ -1,0 +1,1 @@
+from . import hlo_cost, hlo_parse  # noqa: F401

@@ -1,0 +1,138 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/artifacts/dryrun/*.json (+ .hlo.gz sidecars), runs the
+trip-count-aware HLO cost walker, and derives per-(arch x shape x mesh):
+
+  compute term    = flops_per_device / PEAK_FLOPS          [s]
+  memory term     = hbm_bytes_per_device / HBM_BW          [s]
+  collective term = link_bytes_per_device / LINK_BW        [s]
+
+(The partitioned HLO is per-device, so no further division by chip count.)
+Plus MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (prefill/decode),
+the useful-compute ratio MODEL_FLOPS / (chips * flops_per_device), and the
+estimated MFU = MODEL_FLOPS / (chips * PEAK * max(terms)).
+
+Hardware model (TPU v5e-class, per assignment): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+
+from . import hlo_cost
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "artifacts", "dryrun")
+
+
+def analyze_cell(rec: dict, hlo_path: str | None) -> dict:
+    out = dict(arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+               status=rec["status"])
+    if rec["status"] != "ok":
+        out["reason"] = rec.get("reason", rec.get("error", ""))[:200]
+        return out
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    if hlo_path and os.path.exists(hlo_path):
+        with gzip.open(hlo_path, "rt") as f:
+            cost = hlo_cost.analyze(f.read())
+        flops = cost["flops"]
+        hbm = cost["hbm_bytes"]
+        link = cost["link_bytes"]
+        out["coll_by_kind"] = {k: v for k, v in cost["coll_by_kind"].items()}
+        out["score_bytes"] = cost.get("score_bytes", 0.0)
+        out["t_memory_flash"] = max(hbm - out["score_bytes"], 0.0) / HBM_BW
+        out["scaled"] = True
+    else:  # fall back to XLA's (while-bodies-once) numbers
+        flops = rec["cost"].get("flops", 0.0)
+        hbm = rec["cost"].get("bytes accessed", 0.0)
+        link = rec["collectives"]["link_bytes"]
+        out["scaled"] = False
+    t_comp = flops / PEAK_FLOPS
+    t_mem = hbm / HBM_BW
+    t_coll = link / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    n = rec.get("params_active") or rec.get("params_total") or 0.0
+    d_tokens = rec.get("tokens_per_step", 0)
+    mf = (6.0 if rec["shape"].startswith("train") else 2.0) * n * d_tokens
+    total_flops = flops * chips
+    step_time = max(terms.values())
+    step_flash = max(t_comp, out.get("t_memory_flash", t_mem), t_coll)
+    out.update(
+        flops_per_dev=flops, hbm_per_dev=hbm, link_per_dev=link,
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        dominant=dom, model_flops=mf,
+        useful_ratio=(mf / total_flops) if total_flops else 0.0,
+        est_step_time=step_time,
+        est_mfu=(mf / (chips * PEAK_FLOPS * step_time)) if step_time else 0.0,
+        # deployment number: Pallas flash attention keeps score traffic in VMEM
+        est_mfu_flash=(mf / (chips * PEAK_FLOPS * step_flash)) if step_flash else 0.0,
+        est_tokens_per_s=(d_tokens / step_flash) if step_flash else 0.0,
+        mem_gib={k: (v or 0) / 2**30 for k, v in rec.get("memory", {}).items()},
+        params_total=rec.get("params_total"), params_active=rec.get("params_active"),
+        tokens_per_step=d_tokens, chips=chips,
+        compile_s=rec.get("seconds_compile"),
+    )
+    return out
+
+
+def load_all(art_dir: str = None) -> list[dict]:
+    art_dir = art_dir or os.path.normpath(ART_DIR)
+    rows = []
+    for jf in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(jf) as f:
+            rec = json.load(f)
+        rows.append(analyze_cell(rec, jf.replace(".json", ".hlo.gz")))
+    return rows
+
+
+def fmt_time(t: float) -> str:
+    return f"{t*1e3:.1f}ms" if t < 1 else f"{t:.2f}s"
+
+
+def table(rows: list[dict], mesh: str = "16x16") -> str:
+    """Markdown roofline table for one mesh."""
+    hdr = ("| arch | shape | t_comp | t_mem | t_coll | bottleneck | "
+           "MODEL_FLOPS/HLO | est. MFU | arg GiB/dev | temp GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | skip: {r.get('reason','')[:60]} | — | — | — | — |")
+            continue
+        mem = r.get("mem_gib", {})
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_time(r['t_compute'])} | "
+            f"{fmt_time(r['t_memory'])} | {fmt_time(r['t_collective'])} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | {r['est_mfu']*100:.1f}% | "
+            f"{mem.get('argument_size_in_bytes', 0):.2f} | "
+            f"{mem.get('temp_size_in_bytes', 0):.2f} |")
+    return hdr + "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art", default=None)
+    ap.add_argument("--json", default=None, help="write summary JSON here")
+    args = ap.parse_args()
+    rows = load_all(args.art)
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n## Roofline — mesh {mesh}\n")
+        print(table(rows, mesh))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,419 @@
+"""Call-graph cost model over partitioned HLO text.
+
+Why: XLA's `compiled.cost_analysis()` counts a while-loop body ONCE,
+regardless of trip count — under jax.lax.scan-over-layers (how all our
+models lower) this undercounts FLOPs/bytes/collectives by ~n_layers x.
+This walker parses the HLO text, builds the computation call graph
+(fusion / call / while / conditional), extracts while trip counts from the
+loop-condition constants, and accumulates:
+
+  flops      — dot_general from operand shapes x contracting dims (2*MACs);
+               elementwise approximated as result elements.
+  hbm_bytes  — operand+result bytes of top-level (post-fusion) ops: fusion
+               boundaries, dots, copies, collectives — a roofline-grade
+               HBM-traffic estimate.
+  link_bytes — per-collective ring-model traffic (same model as hlo_parse),
+               scaled by trip counts.
+
+Shapes in partitioned HLO are per-device shards, so all outputs are
+per-device. Validated against cost_analysis() on trip-count-1 modules in
+tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^=]*?\))|(?:[\w\[\],\{\}\d]+))\s+([\w\-]+)\((.*)$")
+_CALLED = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPERAND_NAME = re.compile(r"%?([\w\.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shapes_of(sig: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _bytes_of(sig: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * (math.prod(dims) if dims else 1)
+               for dt, dims in _shapes_of(sig))
+
+
+def _elems_of(sig: str) -> int:
+    return sum((math.prod(dims) if dims else 1) for _, dims in _shapes_of(sig))
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_sig: str
+    rest: str
+    operands: list[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list[Op] = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)    # op name -> result sig
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    name_re = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)")
+    comment_re = re.compile(r"/\*.*?\*/")
+    for line in text.splitlines():
+        line = comment_re.sub("", line)  # /*index=N*/ comments break _OP_RE
+        if cur is None:
+            ls = line.strip()
+            if ls.endswith("{") and "->" in ls and (ls.startswith("%") or ls.startswith("ENTRY")):
+                m = name_re.match(ls)
+                if m:
+                    cur = Computation(m.group(1))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, sig, kind, rest = m.groups()
+        op = Op(name, kind, sig, rest)
+        # operand names: first parenthesized list before ), metadata after
+        depth, args = 1, ""
+        for ch in rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                args += ch
+        op.operands = [mm.group(1) for mm in _OPERAND_NAME.finditer(args)
+                       if mm.group(1) in (cur.shapes if cur else {})]
+        cur.ops.append(op)
+        cur.shapes[name] = sig
+    return comps
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    """2 * prod(batch) * prod(lhs_free) * prod(rhs_free) * prod(contract)."""
+    names = op.operands[:2]
+    if len(names) < 2:
+        return 0.0
+    lsh = _shapes_of(comp.shapes.get(names[0], ""))
+    rsh = _shapes_of(comp.shapes.get(names[1], ""))
+    osh = _shapes_of(op.result_sig)
+    if not lsh or not rsh or not osh:
+        return 0.0
+    lhs, out = lsh[0][1], osh[0][1]
+    mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    contract = 1
+    if mm:
+        for d in mm.group(1).split(","):
+            if d:
+                contract *= lhs[int(d)] if int(d) < len(lhs) else 1
+    return 2.0 * (math.prod(out) if out else 1) * contract
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest s32/u32/s64 scalar constant in the loop condition."""
+    best = 1
+    for op in cond.ops:
+        if op.kind == "constant":
+            mm = re.search(r"constant\((\d+)\)", "constant(" + op.rest)
+            if mm:
+                best = max(best, int(mm.group(1)))
+    return best
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", rest)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip()])
+    return 2
+
+
+def _collective_traffic(kind: str, result_bytes: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (n - 1) / n
+    if kind == "all-gather":
+        return result_bytes * (n - 1) / n
+    if kind == "reduce-scatter":
+        return float(result_bytes) * (n - 1)
+    if kind == "all-to-all":
+        return result_bytes * (n - 1) / n
+    return float(result_bytes)  # collective-permute
+
+
+_ZERO_FLOP = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+              "reshape", "broadcast", "iota", "copy", "copy-start", "copy-done",
+              "transpose", "slice", "dynamic-slice", "dynamic-update-slice",
+              "concatenate", "pad", "reverse", "after-all", "partition-id",
+              "custom-call", "rng-bit-generator", "while", "conditional",
+              "call", "fusion", "convert", "select", "compare", "reduce",
+              "scatter", "gather", "sort"}
+
+
+def analyze(text: str) -> dict:
+    comps = parse_module(text)
+    entry_name = None
+    for line in text.splitlines():
+        if line.strip().startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry_name = m.group(1)
+    if entry_name is None or entry_name not in comps:
+        # fall back: computation named 'main*'
+        entry_name = next((n for n in comps if n.startswith("main")), None)
+        if entry_name is None:
+            entry_name = max(comps, key=lambda n: len(comps[n].ops))
+
+    memo: dict[str, dict] = {}
+
+    def _fusion_io_bytes(op: Op, comp: Computation) -> float:
+        """HBM bytes of a fusion: operands + result, but
+        * an operand consumed only via dynamic-slice inside the callee
+          counts at slice bytes (scan reading one layer of a stacked array);
+        * a root dynamic-update-slice counts at update bytes (scan writing
+          one layer), not the whole buffer."""
+        callee_m = _CALLED.search(op.rest)
+        callee = comps.get(callee_m.group(1)) if callee_m else None
+        total = 0.0
+        param_bytes: dict[int, float] = {}
+        root_kind, root_op = None, None
+        if callee is not None:
+            # map parameter index -> effective read bytes
+            pname_by_idx: dict[int, str] = {}
+            for cop in callee.ops:
+                if cop.kind == "parameter":
+                    mi = re.search(r"parameter\((\d+)\)", "parameter(" + cop.rest)
+                    if mi:
+                        pname_by_idx[int(mi.group(1))] = cop.name
+            if callee.ops:
+                root_kind = callee.ops[-1].kind
+                root_op = callee.ops[-1]
+            for idx, pname in pname_by_idx.items():
+                consumers = [c for c in callee.ops if pname in c.operands]
+                full = _bytes_of(callee.shapes.get(pname, ""))
+                if (root_kind == "dynamic-update-slice" and root_op is not None
+                        and root_op.operands and root_op.operands[0] == pname):
+                    # in-place slice write: buffer is aliased, not read
+                    param_bytes[idx] = 0.0
+                elif consumers and all(c.kind in ("dynamic-slice", "slice") for c in consumers):
+                    param_bytes[idx] = min(full, sum(_bytes_of(c.result_sig) for c in consumers))
+                else:
+                    param_bytes[idx] = full
+        for i, oname in enumerate(op.operands):
+            if i in param_bytes:
+                total += param_bytes[i]
+            else:
+                total += _bytes_of(comp.shapes.get(oname, ""))
+        if root_kind == "dynamic-update-slice" and callee is not None:
+            ups = root_op.operands[1:2]
+            total += sum(_bytes_of(callee.shapes.get(u, "")) for u in ups) or _bytes_of(op.result_sig)
+        else:
+            total += _bytes_of(op.result_sig)
+        return total
+
+    def cost_of(name: str, top_level: bool) -> dict:
+        key = f"{name}|{top_level}"
+        if key in memo:
+            return memo[key]
+        comp = comps.get(name)
+        tot = {"flops": 0.0, "hbm_bytes": 0.0, "link_bytes": 0.0,
+               "coll_by_kind": defaultdict(float), "transcendental": 0.0,
+               "score_bytes": 0.0}
+        if comp is None:
+            memo[key] = tot
+            return tot
+
+        def _is_score(sig: str) -> bool:
+            # attention-score-shaped: >=3D with two trailing dims >= 1024 —
+            # HBM traffic a fused (Pallas flash) attention would not incur.
+            for _, dims in _shapes_of(sig):
+                if len(dims) >= 3 and dims[-1] >= 1024 and dims[-2] >= 1024:
+                    return True
+            return False
+
+        for op in comp.ops:
+            if op.kind == "dot":
+                tot["flops"] += _dot_flops(op, comp)
+                b = _bytes_of(op.result_sig) + sum(
+                    _bytes_of(comp.shapes.get(o, "")) for o in op.operands[:2])
+                tot["hbm_bytes"] += b
+                sb = (_bytes_of(op.result_sig) if _is_score(op.result_sig) else 0) + sum(
+                    _bytes_of(comp.shapes.get(o, ""))
+                    for o in op.operands[:2] if _is_score(comp.shapes.get(o, "")))
+                tot["score_bytes"] += sb
+            elif op.kind == "fusion":
+                callee = _CALLED.search(op.rest)
+                if callee:
+                    sub = cost_of(callee.group(1), False)
+                    tot["flops"] += sub["flops"]
+                    tot["link_bytes"] += sub["link_bytes"]
+                    for k, v in sub["coll_by_kind"].items():
+                        tot["coll_by_kind"][k] += v
+                    tot["transcendental"] += sub["transcendental"]
+                    tot["score_bytes"] += sub["score_bytes"]
+                fb = _fusion_io_bytes(op, comp)
+                tot["hbm_bytes"] += fb
+                if _is_score(op.result_sig) or any(
+                        _is_score(comp.shapes.get(o, "")) for o in op.operands):
+                    tot["score_bytes"] += fb
+            elif op.kind == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+                if mb:
+                    body = cost_of(mb.group(1), True)
+                trips = _trip_count(comps[mc.group(1)]) if mc and mc.group(1) in comps else 1
+                if body:
+                    for k in ("flops", "hbm_bytes", "link_bytes", "transcendental", "score_bytes"):
+                        tot[k] += trips * body[k]
+                    for k, v in body["coll_by_kind"].items():
+                        tot["coll_by_kind"][k] += trips * v
+            elif op.kind in ("call", "custom-call"):
+                callee = _CALLED.search(op.rest)
+                if callee and callee.group(1) in comps:
+                    sub = cost_of(callee.group(1), top_level)
+                    for k in ("flops", "hbm_bytes", "link_bytes", "transcendental", "score_bytes"):
+                        tot[k] += sub[k]
+                    for k, v in sub["coll_by_kind"].items():
+                        tot["coll_by_kind"][k] += v
+            elif op.kind == "conditional":
+                mbr = _BRANCHES.search(op.rest)
+                if mbr:
+                    subs = [cost_of(b.strip().lstrip("%"), top_level)
+                            for b in mbr.group(1).split(",")]
+                    if subs:
+                        # worst-case branch
+                        worst = max(subs, key=lambda s: s["flops"] + s["hbm_bytes"])
+                        for k in ("flops", "hbm_bytes", "link_bytes", "transcendental", "score_bytes"):
+                            tot[k] += worst[k]
+                        for k, v in worst["coll_by_kind"].items():
+                            tot["coll_by_kind"][k] += v
+            elif any(op.kind.startswith(c) for c in COLLECTIVES):
+                if op.kind.endswith("-done"):
+                    continue
+                base = op.kind.replace("-start", "")
+                b = _bytes_of(op.result_sig)
+                n = _group_size(op.rest)
+                traffic = _collective_traffic(base, b, n)
+                tot["link_bytes"] += traffic
+                tot["coll_by_kind"][base] += traffic
+                tot["hbm_bytes"] += b
+            elif op.kind in ("convolution",):
+                # flops ~ 2 * out_elems * contracted size — approximate via
+                # operand elems ratio; our models lower convs as shifts, so
+                # this path is rare.
+                out_e = _elems_of(op.result_sig)
+                in_b = sum(_elems_of(comp.shapes.get(o, "")) for o in op.operands[:2])
+                tot["flops"] += 2.0 * out_e * max(in_b // max(out_e, 1), 1)
+                tot["hbm_bytes"] += _bytes_of(op.result_sig)
+            else:
+                e = _elems_of(op.result_sig)
+                if op.kind in ("exponential", "log", "tanh", "rsqrt", "sqrt",
+                               "power", "sine", "cosine", "logistic"):
+                    tot["transcendental"] += e
+                    tot["flops"] += e
+                elif op.kind not in _ZERO_FLOP:
+                    tot["flops"] += e
+                if top_level and op.kind in ("copy", "scatter", "gather", "reduce",
+                                             "dynamic-update-slice", "sort"):
+                    tot["hbm_bytes"] += _bytes_of(op.result_sig)
+        memo[key] = tot
+        return tot
+
+    total = cost_of(entry_name, True)
+    total["coll_by_kind"] = dict(total["coll_by_kind"])
+    total["entry"] = entry_name
+    total["n_computations"] = len(comps)
+    return total
+
+
+def top_costs(text: str, *, metric: str = "hbm_bytes", n: int = 20) -> list[dict]:
+    """Per-op cost contributions with trip multipliers — the 'profile' view
+    used by the §Perf hillclimb on this no-real-TPU host."""
+    comps = parse_module(text)
+    entry_name = None
+    for line in text.splitlines():
+        if line.strip().startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry_name = m.group(1)
+    if entry_name is None:
+        entry_name = next((k for k in comps if k.startswith("main")), list(comps)[0])
+    out: list[dict] = []
+
+    def walk(name: str, mult: float, depth: int):
+        comp = comps.get(name)
+        if comp is None or depth > 12:
+            return
+        for op in comp.ops:
+            rec = None
+            if op.kind == "dot":
+                fl = _dot_flops(op, comp)
+                hb = _bytes_of(op.result_sig) + sum(_bytes_of(comp.shapes.get(o, ""))
+                                                    for o in op.operands[:2])
+                rec = {"flops": fl, "hbm_bytes": hb, "link_bytes": 0.0}
+            elif op.kind == "fusion":
+                hb = 0.0
+                # reuse analyze()'s discounting by rough recompute
+                callee_m = _CALLED.search(op.rest)
+                hb = sum(_bytes_of(comp.shapes.get(o, "")) for o in op.operands) + \
+                    _bytes_of(op.result_sig)
+                rec = {"flops": 0.0, "hbm_bytes": hb, "link_bytes": 0.0}
+            elif any(op.kind.startswith(c) for c in COLLECTIVES) and not op.kind.endswith("-done"):
+                b = _bytes_of(op.result_sig)
+                g = _group_size(op.rest)
+                t = _collective_traffic(op.kind.replace("-start", ""), b, g)
+                rec = {"flops": 0.0, "hbm_bytes": b, "link_bytes": t, "group": g}
+            elif op.kind == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+                trips = _trip_count(comps[mc.group(1)]) if mc and mc.group(1) in comps else 1
+                if mb:
+                    walk(mb.group(1), mult * trips, depth + 1)
+                continue
+            elif op.kind in ("call",):
+                cm = _CALLED.search(op.rest)
+                if cm and cm.group(1) in comps:
+                    walk(cm.group(1), mult, depth + 1)
+                continue
+            if rec and rec.get(metric, 0.0) > 0:
+                meta = re.search(r'op_name="([^"]*)"', op.rest)
+                out.append({"comp": name, "op": op.name, "kind": op.kind,
+                            "mult": mult, "raw": rec[metric],
+                            "total": rec[metric] * mult,
+                            "op_name": (meta.group(1) if meta else "")[:120]})
+    walk(entry_name, 1.0, 0)
+    out.sort(key=lambda r: -r["total"])
+    return out[:n]

@@ -1,0 +1,93 @@
+"""Parse collective traffic out of partitioned (post-SPMD) HLO text.
+
+Shapes in the partitioned module are per-device shards, so the byte counts
+derived here are per-chip. The per-op link-traffic model (ring algorithms):
+
+  all-reduce        2 * bytes(result)           (reduce-scatter + all-gather)
+  all-gather        bytes(result) * (n-1)/n
+  reduce-scatter    bytes(result) * (n-1)       (input = result * n)
+  all-to-all        bytes(result) * (n-1)/n
+  collective-permute bytes(result)
+
+where n is the replica-group size parsed from `replica_groups`.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip()])
+    return 2
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Returns {'per_op': [...], 'bytes_by_kind': {...}, 'link_bytes': float,
+    'count': int}. 'link_bytes' is the modeled per-chip link traffic."""
+    per_op = []
+    bytes_by_kind: dict[str, float] = defaultdict(float)
+    link_bytes = 0.0
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        sig, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        b = _shape_bytes(sig)
+        n = _group_size(line)
+        if n <= 1:
+            continue
+        if kind == "all-reduce":
+            traffic = 2.0 * b * (n - 1) / n
+        elif kind == "all-gather":
+            traffic = b * (n - 1) / n
+        elif kind == "reduce-scatter":
+            traffic = b * (n - 1)
+        elif kind == "all-to-all":
+            traffic = b * (n - 1) / n
+        else:  # collective-permute
+            traffic = float(b)
+        per_op.append({"kind": kind, "result_bytes": b, "group": n, "link_bytes": traffic})
+        bytes_by_kind[kind] += traffic
+        link_bytes += traffic
+    return {"per_op": per_op, "bytes_by_kind": dict(bytes_by_kind),
+            "link_bytes": link_bytes, "count": len(per_op)}
+
+
+def top_collectives(parsed: dict, n: int = 10) -> list[dict]:
+    return sorted(parsed["per_op"], key=lambda o: -o["link_bytes"])[:n]

@@ -1,0 +1,275 @@
+"""Sharding rules: parameter PartitionSpecs and activation hint specs.
+
+Mesh axes: ("pod", "data", "model") multi-pod or ("data", "model") single-pod.
+  data  — DP (batch); also FSDP storage axis for weights and ZeRO-1 states,
+          and the expert-parallel axis for MoE expert stacks.
+  model — TP: attention heads, FFN hidden, vocab; also the sequence axis of
+          decode KV caches (split-K decode) and of SP activations.
+  pod   — extra DP; weights replicated across pods, optimizer states ZeRO'd
+          over pod when divisible.
+
+All rules degrade gracefully: an axis is only used when the dim is
+divisible by the axis size (`_maybe`), so reduced smoke configs and
+odd-head architectures stay valid.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(mesh: Mesh, cfg=None):
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    # Small archs with nothing to tensor-parallelize (e.g. xlstm-125m) run
+    # pure DP: the batch is sharded over the model axis as well.
+    if cfg is not None and getattr(cfg, "dp_over_model", False):
+        dp = dp + ("model",)
+    return dp
+
+
+def _maybe(axis, dim: int, sizes: dict[str, int]):
+    """Use `axis` (str or tuple) on a dim only if evenly divisible."""
+    if axis is None:
+        return None
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    total = 1
+    for a in axes:
+        total *= sizes.get(a, 1)
+    if total > 1 and dim % total == 0:
+        return axis
+    # try shrinking a tuple left-to-right (e.g. ("data","model") -> "model")
+    if not isinstance(axis, str) and len(axes) > 1:
+        return _maybe(axes[-1], dim, sizes)
+    return None
+
+
+def constrain(x, spec: P, mesh: Mesh):
+    """with_sharding_constraint that prunes axes whose dim is indivisible."""
+    sizes = mesh_axis_sizes(mesh)
+    fixed = []
+    for dim, ax in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        fixed.append(_maybe(ax, dim, sizes))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs (path-based)
+# ---------------------------------------------------------------------------
+
+def _leaf_spec(path: tuple[str, ...], shape: tuple[int, ...], cfg, sizes) -> P:
+    name = path[-1]
+    fsdp = "data" if cfg.fsdp else None
+    # (H5 in EXPERIMENTS §Perf — (data,model) joint weight storage — was
+    # tried and REFUTED: the 256-way use-site gathers cost more than the
+    # grad reduce-scatter saves. Weights stay FSDP over "data" only.)
+    tp_attn = cfg.heads_shardable and cfg.kv_heads_shardable
+    in_mixer = "mixer" in path or "cell" in path
+    in_moe_stack = len(shape) == 3 and name in ("w_gate", "w_up", "w_down")
+
+    def spec(*axes):
+        return P(*[_maybe(a, d, sizes) for a, d in zip(axes, shape)])
+
+    if name == "embed":
+        return spec("model", fsdp)                      # vocab-sharded
+    if name == "lm_head":
+        return spec(fsdp, "model")
+    if in_moe_stack:                                    # (E, D, F) / (E, F, D)
+        # pure EP: experts over data x model jointly when divisible
+        # (dsv3: 256 experts / 256 chips); _maybe falls back to "model".
+        return spec(("data", "model"), None, None)
+    if name == "router":
+        return spec(None, None)
+    if name in ("router_bias", "b_i", "b_f", "A_log", "D", "dt_bias", "b_gates",
+                "gate_attn", "gate_mlp"):
+        return P(*([None] * len(shape)))
+    if in_mixer:
+        # Mamba2 / xLSTM internals: fused in/up projections keep their output
+        # dim replicated (segment boundaries are not 16-aligned); the output
+        # projection is row-parallel over "model".
+        if name in ("in_proj", "w_up"):
+            return spec(fsdp, None)
+        if name in ("out_proj", "w_down"):
+            return spec("model", fsdp)
+        if name in ("w_q", "w_k", "w_v"):
+            return spec(None, None)
+        if name in ("conv_w", "conv_b", "w_if", "r_gates"):
+            return P(*([None] * len(shape)))
+    # attention projections: TP over heads only when BOTH q and kv heads
+    # divide the model axis (else the grouped/SP attention path is used and
+    # projections stay head-unsharded — inputs/outputs are S-sharded).
+    if name == "w_q":
+        return spec(fsdp, "model") if tp_attn else spec(fsdp, None)
+    if name in ("w_k", "w_v"):
+        return spec(fsdp, "model") if tp_attn else spec(fsdp, None)
+    if name == "w_o":
+        return spec("model", fsdp) if tp_attn else spec(fsdp, None)
+    if name == "b_q":
+        return spec("model" if tp_attn else None)
+    if name in ("b_k", "b_v"):
+        return spec("model" if tp_attn else None)
+    # MLA
+    if name in ("w_dq", "w_dkv", "w_kr"):
+        return spec(fsdp, None)
+    if name in ("w_uq", "w_uk", "w_uv"):
+        return spec(None, "model" if tp_attn else None)
+    # dense MLP: TP over F when attention is TP'd; for grouped/SP archs the
+    # whole layer runs sequence-parallel (no model-axis comm) with weights
+    # FSDP-stored and optimizer state ZeRO'd over the idle model axis.
+    if name in ("w_gate", "w_up"):
+        return spec(fsdp, "model") if tp_attn else spec(fsdp, None)
+    if name == "w_down":
+        return spec("model", fsdp) if tp_attn else spec(fsdp, None)
+    if name in ("b_up",):
+        return spec("model" if tp_attn else None)
+    if name in ("b_down",):
+        return spec(None)
+    # norms and everything else: replicated
+    return P(*([None] * len(shape)))
+
+
+def _path_names(keypath) -> tuple[str, ...]:
+    out = []
+    for k in keypath:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def param_specs(params_shape: Pytree, cfg, mesh: Mesh) -> Pytree:
+    """PartitionSpec tree matching a params (or ShapeDtypeStruct) tree.
+
+    Scanned groups have a leading layer axis: the leading dim is skipped when
+    the path passes through 'groups' (stacked) params.
+    """
+    sizes = mesh_axis_sizes(mesh)
+
+    def one(keypath, leaf):
+        names = _path_names(keypath)
+        shape = tuple(leaf.shape)
+        stacked = "groups" in names  # groups hold layer-stacked param trees
+        eff_shape = shape[1:] if stacked and len(shape) >= 1 else shape
+        spec = _leaf_spec(names, eff_shape, cfg, sizes)
+        if stacked:
+            spec = P(None, *tuple(spec))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def shardings_for(tree_specs: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation hints
+# ---------------------------------------------------------------------------
+
+def make_hint(mesh: Mesh, cfg):
+    """Returns hint(x, logical_name) applying with_sharding_constraint."""
+    dp = dp_axes(mesh, cfg)
+    heads_ok = cfg.heads_shardable
+    kv_ok = cfg.kv_heads_shardable
+    ssm_heads_ok = cfg.ssm is not None and cfg.ssm.n_heads % mesh_axis_sizes(mesh).get("model", 1) == 0
+
+    if "model" in dp:  # pure-DP arch: "model" already consumed by the batch
+        table = {
+            "act": P(dp, None, None),
+            "heads_q": P(dp, None, None, None),
+            "heads_kv": P(dp, None, None, None),
+            "ffn": P(dp, None, None),
+            "moe_dispatch": P(("data", "model"), None, None),
+            "moe_ffn": P(("data", "model"), None, None),
+            "moe_group": P(dp, None, None, None),
+            "ssm_heads": P(dp, None, None, None),
+            "logits": P(dp, None, None),
+        }
+    else:
+        table = {
+            # Megatron-SP: hidden states sequence-sharded over "model".
+            # constrain() prunes the axis when S is indivisible (e.g. decode).
+            "act": P(dp, "model", None),
+            # TP over heads when BOTH q and kv divisible; otherwise SP.
+            "heads_q": (P(dp, None, "model", None) if (heads_ok and kv_ok)
+                        else P(dp, "model", None, None)),
+            "heads_kv": (P(dp, None, "model", None) if (heads_ok and kv_ok)
+                         else P(dp, None, None, None)),
+            # SP-FFN for grouped archs (no model-axis comm in the MLP).
+            "ffn": (P(dp, None, "model") if (heads_ok and kv_ok)
+                    else P(dp, "model", None)),
+            "moe_dispatch": P(("data", "model"), None, None),
+            "moe_ffn": P(("data", "model"), None, None),
+            "moe_group": P(dp, "model", None, None),   # (B, E, C, D) group-local
+            "ssm_heads": P(dp, None, "model", None) if ssm_heads_ok else P(dp, None, None, None),
+            "logits": P(dp, None, "model"),
+        }
+
+    def hint(x, name="act"):
+        spec = table.get(name)
+        if spec is None or x.ndim < len([a for a in tuple(spec)]):
+            return x
+        return constrain(x, spec, mesh)
+
+    hint.mesh = mesh   # lets layers (MoE a2a) build shard_map plans
+    hint.cfg = cfg
+    return hint
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_shape: Pytree, mesh: Mesh, cfg=None) -> Pytree:
+    """Tokens/labels/extras: shard the leading (batch) dim over DP axes."""
+    dp = dp_axes(mesh, cfg)
+    sizes = mesh_axis_sizes(mesh)
+
+    def one(leaf):
+        ax = _maybe(dp, leaf.shape[0], sizes) if leaf.ndim else None
+        return P(*([ax] + [None] * (leaf.ndim - 1))) if leaf.ndim else P()
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_specs(cache_shape: Pytree, mesh: Mesh, cfg) -> Pytree:
+    """Decode caches: batch over DP, the long (time) axis over "model"
+    (split-K decode). Stacked layer axis leads most leaves.
+
+    Leaf kinds (after the stacked layer axis where present):
+      (B, T, G, hd) k/v; (B, T, r) MLA latents; (B, H, N, P) ssm state;
+      (B, NH, DH, DH) mLSTM C; (B, K-1, C) conv tail; scalars.
+    """
+    dp = dp_axes(mesh, cfg)
+    sizes = mesh_axis_sizes(mesh)
+
+    def one(keypath, leaf):
+        names = _path_names(keypath)
+        shape = tuple(leaf.shape)
+        stacked = "groups" in names
+        eff = shape[1:] if stacked else shape
+        name = names[-1]
+        if not eff:  # scalar (pos)
+            return P()
+        axes: list = [None] * len(eff)
+        axes[0] = _maybe(dp, eff[0], sizes)
+        model_free = "model" not in (axes[0] or ()) and axes[0] != "model"
+        if name in ("k", "v", "xk", "xv", "ckv", "kr", "ctx") and len(eff) >= 2 and model_free:
+            axes[1] = _maybe("model", eff[1], sizes)
+        spec = P(*axes)
+        return P(None, *tuple(spec)) if stacked else spec
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

@@ -1,0 +1,159 @@
+"""Sharded, atomic, resharding-capable checkpointing.
+
+Layout:  <dir>/step_<N>/
+           manifest.json   — tree structure, shapes, dtypes, per-leaf sha256
+           leaf_<i>.npy    — one file per pytree leaf (host-gathered)
+
+Fault-tolerance properties:
+  * atomic publish: writes go to step_<N>.tmp, fsync'd, then rename —
+    a crash mid-write never corrupts the latest checkpoint;
+  * integrity: per-leaf sha256 verified on restore (corrupt/truncated
+    checkpoints are skipped, restore falls back to the previous step);
+  * elastic restore: leaves are re-sharded onto whatever mesh/sharding the
+    restoring job provides (jax.device_put with the new sharding) — tested
+    save-on-mesh-A / restore-on-mesh-B in tests/test_checkpoint.py;
+  * keep-last-k garbage collection; async save via a background thread.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _leaf_paths(tree) -> list[str]:
+    paths, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(kp) for kp, _ in paths]
+
+
+def save(ckpt_dir: str, step: int, tree: Pytree, *, keep: int = 3) -> str:
+    """Synchronous atomic save. Returns the published directory."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "treedef": str(treedef), "n_leaves": len(leaves),
+                "paths": _leaf_paths(tree), "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        logical_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or "bfloat16" in logical_dtype:
+            # numpy can't round-trip ml_dtypes descriptors: store raw u16
+            arr_disk = arr.view(np.uint16)
+        else:
+            arr_disk = arr
+        fname = f"leaf_{i:05d}.npy"
+        with open(os.path.join(tmp, fname), "wb") as f:
+            np.save(f, arr_disk)
+            f.flush()
+            os.fsync(f.fileno())
+        digest = hashlib.sha256(arr_disk.tobytes()).hexdigest()
+        manifest["leaves"].append({"file": fname, "shape": list(arr.shape),
+                                   "dtype": logical_dtype, "sha256": digest})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)          # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+class AsyncSaver:
+    """Overlaps checkpoint I/O with the next training steps."""
+
+    def __init__(self):
+        self._thread: threading.Thread | None = None
+
+    def save(self, ckpt_dir: str, step: int, tree: Pytree, *, keep: int = 3):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._thread = threading.Thread(
+            target=save, args=(ckpt_dir, step, host_tree), kwargs={"keep": keep},
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    return steps[-1] if steps else None
+
+
+def _verify(path: str, manifest: dict) -> bool:
+    for leaf in manifest["leaves"]:
+        fp = os.path.join(path, leaf["file"])
+        try:
+            arr = np.load(fp)
+        except Exception:      # truncated / garbage / missing file
+            return False
+        if hashlib.sha256(arr.tobytes()).hexdigest() != leaf["sha256"]:
+            return False
+    return True
+
+
+def restore(ckpt_dir: str, target: Pytree, *, step: int | None = None,
+            shardings: Pytree | None = None, verify: bool = True) -> tuple[Pytree, int]:
+    """Restore into the structure of `target`, placing leaves with
+    `shardings` (elastic re-mesh). Falls back to older checkpoints when a
+    newer one is corrupt. Raises FileNotFoundError if none is usable."""
+    candidates = sorted((int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                         if d.startswith("step_") and not d.endswith(".tmp")),
+                        reverse=True)
+    if step is not None:
+        candidates = [step]
+    leaves_t, treedef = jax.tree_util.tree_flatten(target)
+    sh_leaves = (jax.tree_util.tree_leaves(shardings, is_leaf=lambda s: hasattr(s, "mesh"))
+                 if shardings is not None else [None] * len(leaves_t))
+    for s in candidates:
+        path = os.path.join(ckpt_dir, f"step_{s:08d}")
+        mf = os.path.join(path, "manifest.json")
+        if not os.path.exists(mf):
+            continue
+        with open(mf) as f:
+            manifest = json.load(f)
+        if manifest["n_leaves"] != len(leaves_t):
+            continue
+        if verify and not _verify(path, manifest):
+            continue
+        out = []
+        for i, (tgt, shd) in enumerate(zip(leaves_t, sh_leaves)):
+            meta = manifest["leaves"][i]
+            arr = np.load(os.path.join(path, meta["file"]))
+            if "bfloat16" in meta["dtype"]:
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            if hasattr(tgt, "dtype") and arr.dtype != tgt.dtype:
+                try:
+                    arr = arr.astype(tgt.dtype)
+                except (ValueError, TypeError):   # numpy lacking a cast path
+                    arr = np.asarray(jax.numpy.asarray(arr).astype(tgt.dtype))
+            out.append(jax.device_put(arr, shd) if shd is not None else jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, out), s
+    raise FileNotFoundError(f"no usable checkpoint in {ckpt_dir}")

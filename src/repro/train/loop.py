@@ -1,0 +1,68 @@
+"""The training loop: steps + checkpointing + fault tolerance wired together.
+
+Auto-resumes from the latest valid checkpoint (including onto a *different*
+mesh — elastic restart), checkpoints on SIGTERM (preemption), watches for
+stragglers, and logs metrics.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.sharding import rules
+from . import checkpoint as ckpt_mod
+from .fault import PreemptionGuard, StepTimer, StragglerWatchdog
+from .step import init_state, make_train_step
+
+
+def train(cfg, mesh, data_stream, *, steps: int, ckpt_dir: str | None = None,
+          ckpt_every: int = 100, optimizer: str = "adamw", peak_lr: float = 3e-4,
+          log_every: int = 10, log: Callable[[str], None] = print,
+          state=None, async_save: bool = True):
+    """Runs `steps` training steps; returns (state, history)."""
+    hint = rules.make_hint(mesh, cfg)
+    step_fn = make_train_step(cfg, mesh, optimizer=optimizer, peak_lr=peak_lr,
+                              total_steps=max(steps, 1))
+    jitted = jax.jit(step_fn, donate_argnums=(0,))
+
+    start_step = 0
+    if state is None:
+        state = init_state(jax.random.key(0), cfg, optimizer=optimizer)
+        if ckpt_dir and ckpt_mod.latest_step(ckpt_dir) is not None:
+            state, start_step = ckpt_mod.restore(ckpt_dir, state)
+            log(f"[train] resumed from step {start_step}")
+
+    guard = PreemptionGuard()
+    watchdog = StragglerWatchdog(
+        on_alarm=lambda i, s, e: log(f"[straggler] step {i}: {s:.3f}s vs EWMA {e:.3f}s"))
+    saver = ckpt_mod.AsyncSaver() if async_save else None
+    history = []
+
+    with mesh:
+        for i in range(start_step, steps):
+            batch = data_stream.batch_at(i)
+            with StepTimer() as t:
+                state, metrics = jitted(state, batch)
+                jax.block_until_ready(metrics["loss"])
+            watchdog.step(i, t.seconds)
+            if i % log_every == 0 or i == steps - 1:
+                loss = float(metrics["loss"])
+                history.append({"step": i, "loss": loss, "seconds": t.seconds})
+                log(f"[train] step {i} loss {loss:.4f} ({t.seconds:.2f}s)")
+            if ckpt_dir and (i + 1) % ckpt_every == 0:
+                (saver.save if saver else ckpt_mod.save)(ckpt_dir, i + 1, state)
+            if guard.requested:
+                log(f"[train] preemption requested; checkpointing at step {i + 1}")
+                if saver:
+                    saver.wait()
+                if ckpt_dir:
+                    ckpt_mod.save(ckpt_dir, i + 1, state)
+                break
+    if saver:
+        saver.wait()
+    guard.restore_handlers()
+    return state, history

@@ -1,0 +1,119 @@
+"""train_step / loss: pure functions built per (config, mesh).
+
+Features: bf16 forward, fp32 loss, global-norm clipping, AdamW or Adafactor,
+microbatch gradient accumulation (jax.lax.scan over microbatches), MoE aux
+losses, DeepSeek aux-free router-bias balance update, donated state.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.layers import softmax_cross_entropy
+from repro.optim import adamw_init, adamw_update, adafactor_init, adafactor_update, cosine_schedule
+from repro.sharding import rules
+
+Pytree = Any
+
+
+def init_state(key, cfg, *, optimizer: str = "adamw") -> dict:
+    params = lm.init_params(key, cfg)
+    opt = adamw_init(params) if optimizer == "adamw" else adafactor_init(params)
+    return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+
+
+def loss_fn(params, cfg, batch, *, hint=lm.NO_HINT):
+    logits, metrics = lm.forward(params, cfg, batch, hint=hint)
+    logits = hint(logits, "logits")
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.concatenate([batch["tokens"][:, 1:], batch["tokens"][:, -1:]], axis=1)
+    loss, lmm = softmax_cross_entropy(logits, labels, z_loss=cfg.z_loss)
+    metrics = dict(metrics)
+    metrics.update(lmm)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_weight * metrics.get("moe_aux", 0.0)
+        loss = loss + cfg.moe.z_loss_weight * metrics.get("moe_z", 0.0)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _global_norm(tree):
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def _clip_by_global_norm(grads, max_norm):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def _update_router_bias(params, expert_load, gamma: float = 1e-3):
+    """DeepSeek-V3 aux-free balancing: push bias against over-loaded experts."""
+    def upd(keypath, p):
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
+        if names[-1] != "router_bias":
+            return p
+        err = expert_load - jnp.mean(expert_load)
+        return p - gamma * jnp.sign(err)
+
+    return jax.tree_util.tree_map_with_path(upd, params)
+
+
+def make_train_step(cfg, mesh, *, optimizer: str = "adamw",
+                    peak_lr: float = 3e-4, warmup: int = 200, total_steps: int = 10000,
+                    max_grad_norm: float = 1.0):
+    """Returns train_step(state, batch) -> (state, metrics). For gradient
+    accumulation use make_accum_train_step."""
+    hint = rules.make_hint(mesh, cfg)
+    upd_fn = adamw_update if optimizer == "adamw" else adafactor_update
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: loss_fn(p, cfg, batch, hint=hint), has_aux=True)(params)
+
+    def train_step(state, batch):
+        params = state["params"]
+        (loss, metrics), grads = grads_of(params, batch)
+        grads, gnorm = _clip_by_global_norm(grads, max_grad_norm)
+        metrics["grad_norm"] = gnorm
+        lr = cosine_schedule(state["step"], peak_lr=peak_lr, warmup=warmup, total=total_steps)
+        metrics["lr"] = lr
+        new_params, new_opt = upd_fn(grads, state["opt"], params, lr=lr)
+        if cfg.moe is not None and cfg.moe.router_style == "sigmoid" and "expert_load" in metrics:
+            new_params = _update_router_bias(new_params, metrics["expert_load"])
+        metrics.pop("expert_load", None)
+        return {"params": new_params, "opt": new_opt, "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def make_accum_train_step(cfg, mesh, *, optimizer: str = "adamw", accum: int = 4,
+                          peak_lr: float = 3e-4, warmup: int = 200,
+                          total_steps: int = 10000, max_grad_norm: float = 1.0):
+    """Gradient-accumulation variant: microbatches scanned with lax.scan."""
+    hint = rules.make_hint(mesh, cfg)
+    upd_fn = adamw_update if optimizer == "adamw" else adafactor_update
+
+    def train_step(state, batch):
+        params = state["params"]
+        micro = jax.tree.map(lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]), batch)
+
+        def body(g_acc, mb):
+            (loss, _), g = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, mb, hint=hint), has_aux=True)(params)
+            return jax.tree.map(lambda a, b: a + b.astype(jnp.float32) / accum, g_acc, g), loss
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, losses = jax.lax.scan(body, g0, micro)
+        grads, gnorm = _clip_by_global_norm(grads, max_grad_norm)
+        lr = cosine_schedule(state["step"], peak_lr=peak_lr, warmup=warmup, total=total_steps)
+        new_params, new_opt = upd_fn(grads, state["opt"], params, lr=lr)
+        metrics = {"loss": jnp.mean(losses), "grad_norm": gnorm, "lr": lr}
+        return {"params": new_params, "opt": new_opt, "step": state["step"] + 1}, metrics
+
+    return train_step

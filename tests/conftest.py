@@ -1,0 +1,34 @@
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+sys.path.insert(0, os.path.abspath(SRC))
+
+
+def run_subprocess(code: str, *, devices: int = 8, timeout: int = 900) -> str:
+    """Run `code` in a fresh python with N virtual devices (host platform).
+
+    Used by tests that need a multi-device mesh: the main pytest process
+    must keep the default single device (per the assignment, the 512-device
+    override is dry-run-only)."""
+    prelude = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        import sys
+        sys.path.insert(0, {os.path.abspath(SRC)!r})
+    """)
+    proc = subprocess.run([sys.executable, "-c", prelude + textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(f"subprocess failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+    return np.random.default_rng(0)

@@ -1,0 +1,34 @@
+"""Block-width autotuner: the paper's m8-ceiling rule as a VMEM budget."""
+import jax.numpy as jnp
+
+from repro.core.autotune import (erode_working_set, filter2d_working_set, pick_lmul)
+from repro.core.vector import VectorConfig
+
+
+def test_monotone_in_width():
+    """Wider images -> working set grows -> picked lmul never increases."""
+    prev = 99
+    for w in (1920, 3840, 7680, 15360, 30720):
+        l = pick_lmul(filter2d_working_set(w, 13)).lmul
+        assert l <= prev
+        prev = l
+
+
+def test_widening_lowers_ceiling():
+    """u8->f32 widening (the paper's m4-vs-m8 point): at the same geometry
+    the widened filter kernel caps at a lower/equal lmul than u8 erosion."""
+    for w in (3840, 7680, 15360):
+        l_filter = pick_lmul(filter2d_working_set(w, 13)).lmul
+        l_erode = pick_lmul(erode_working_set(w, 3)).lmul
+        assert l_filter <= l_erode
+
+
+def test_picked_lmul_fits_budget():
+    for w in (1920, 3840, 7680, 15260):
+        for k in (3, 7, 13):
+            ws = filter2d_working_set(w, k)
+            vc = pick_lmul(ws)
+            assert ws.bytes(vc) <= vc.vmem_budget
+            # and the next lmul up would not fit (or is already max)
+            if vc.lmul < 8:
+                assert ws.bytes(vc.with_lmul(vc.lmul * 2)) > vc.vmem_budget

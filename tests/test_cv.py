@@ -1,0 +1,52 @@
+"""CV pipeline: SIFT-lite determinism, BoW histograms, SVM, end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cv import bow, features, pipeline, svm
+from repro.data.synthetic import ImageStream
+
+
+@pytest.fixture(scope="module")
+def imgs():
+    return ImageStream().batch(40, split="train")
+
+
+def test_sift_shapes(imgs):
+    x, _ = imgs
+    out = features.sift(x[0].astype(jnp.float32), max_kp=16)
+    assert out["desc"].shape == (16, 128)
+    assert out["valid"].dtype == jnp.bool_
+    # descriptors are L2-bounded (SIFT clamp + renorm)
+    norms = jnp.linalg.norm(out["desc"], axis=1)
+    assert float(jnp.max(norms)) < 1.01
+
+
+def test_histogram_normalized(imgs):
+    x, _ = imgs
+    key = jax.random.key(0)
+    desc = jax.random.normal(key, (4, 32, 128))
+    valid = jnp.ones((4, 32), bool)
+    cents = jax.random.normal(key, (16, 128))
+    h = bow.batch_histograms(desc, valid, cents, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(jnp.sum(h, axis=1)), 1.0, rtol=1e-5)
+
+
+def test_svm_separates():
+    key = jax.random.key(0)
+    x0 = jax.random.normal(key, (50, 8)) + jnp.asarray([3.0] + [0] * 7)
+    x1 = jax.random.normal(jax.random.key(1), (50, 8)) - jnp.asarray([3.0] + [0] * 7)
+    x = jnp.concatenate([x0, x1])
+    y = jnp.concatenate([jnp.zeros(50, jnp.int32), jnp.ones(50, jnp.int32)])
+    model = svm.svm_train(x, y, n_classes=2, steps=200)
+    acc = float(jnp.mean((svm.svm_predict(model, x) == y)))
+    assert acc > 0.95
+
+
+def test_pipeline_beats_chance(imgs):
+    x, y = imgs
+    model = pipeline.train(jax.random.key(0), x, y, dict_size=32, max_kp=8)
+    xte, yte = ImageStream().batch(30, split="test")
+    acc = pipeline.accuracy(model, xte, yte, max_kp=8)
+    assert acc > 0.15   # 10 classes, chance 0.1

@@ -1,0 +1,54 @@
+"""Straggler watchdog + preemption guard + training loop integration."""
+import os
+import signal
+
+import jax
+
+from repro.configs import reduced_config
+from repro.data.synthetic import TokenStream
+from repro.launch.mesh import make_host_mesh
+from repro.train import checkpoint as ck
+from repro.train.fault import StragglerWatchdog
+from repro.train.loop import train
+
+
+def test_watchdog_flags_stragglers():
+    wd = StragglerWatchdog(threshold=2.0, warmup=3)
+    for i in range(10):
+        assert not wd.step(i, 1.0)
+    assert wd.step(10, 5.0)          # 5x EWMA -> straggler
+    assert len(wd.alarms) == 1
+    assert not wd.step(11, 1.0)      # EWMA not poisoned by the outlier
+
+
+def test_train_loop_resume(tmp_path):
+    cfg = reduced_config("gemma-7b")
+    mesh = make_host_mesh()
+    stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    state, hist = train(cfg, mesh, stream, steps=4, ckpt_dir=str(tmp_path),
+                        ckpt_every=2, log=lambda *_: None, async_save=False)
+    assert ck.latest_step(str(tmp_path)) == 4
+    # resume continues from step 4 (fresh process would do the same)
+    state2, hist2 = train(cfg, mesh, stream, steps=6, ckpt_dir=str(tmp_path),
+                          ckpt_every=2, log=lambda *_: None, async_save=False)
+    assert int(state2["step"]) == 6
+
+
+def test_preemption_checkpoints(tmp_path):
+    cfg = reduced_config("xlstm-125m")
+    mesh = make_host_mesh()
+    stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+
+    calls = {"n": 0}
+    orig = None
+
+    def fake_log(msg):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            os.kill(os.getpid(), signal.SIGTERM)   # preempt after first log
+
+    state, hist = train(cfg, mesh, stream, steps=50, ckpt_dir=str(tmp_path),
+                        ckpt_every=1000, log=fake_log, log_every=1, async_save=False)
+    # preemption checkpoint exists well before step 50
+    assert ck.latest_step(str(tmp_path)) is not None
+    assert int(state["step"]) < 50

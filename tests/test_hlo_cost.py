@@ -1,0 +1,31 @@
+"""HLO cost walker: matches XLA cost_analysis on unscanned modules and
+applies trip counts on scanned ones."""
+from conftest import run_subprocess
+
+
+def test_walker_validates():
+    out = run_subprocess("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from repro.roofline.hlo_cost import analyze
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+ns = lambda *sp: NamedSharding(mesh, P(*sp))
+def f(w1, w2, x):
+    return jnp.mean((jax.nn.gelu(x @ w1) @ w2) ** 2)
+xs = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+w1s = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+w2s = jax.ShapeDtypeStruct((512, 256), jnp.float32)
+c = jax.jit(f, in_shardings=(ns(None,"model"), ns("model",None), ns("data",None))).lower(w1s, w2s, xs).compile()
+ratio = analyze(c.as_text())["flops"] / c.cost_analysis()["flops"]
+assert 0.9 < ratio < 1.1, ratio
+def g(w1, w2, x):
+    def body(h, _):
+        return jax.nn.gelu(h @ w1) @ w2, None
+    h, _ = jax.lax.scan(body, x, None, length=10)
+    return jnp.mean(h ** 2)
+c2 = jax.jit(g, in_shardings=(ns(None,"model"), ns("model",None), ns("data",None))).lower(w1s, w2s, xs).compile()
+ratio2 = analyze(c2.as_text())["flops"] / c2.cost_analysis()["flops"]
+assert 9 < ratio2 < 11, ratio2
+print("WALKER_OK", ratio, ratio2)
+""")
+    assert "WALKER_OK" in out

@@ -1,0 +1,19 @@
+"""Fused distance+argmin BoW kernel vs oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.vector import VectorConfig
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("lmul", [1, 4])
+@pytest.mark.parametrize("n,k", [(100, 50), (1000, 250), (513, 129)])
+def test_bow_assign(rng, lmul, n, k):
+    desc = jnp.asarray(rng.standard_normal((n, 128)), jnp.float32)
+    cent = jnp.asarray(rng.standard_normal((k, 128)), jnp.float32)
+    idx, d2 = ops.bow_assign(desc, cent, vc=VectorConfig(lmul=lmul))
+    ridx, rd2 = ref.bow_assign_ref(desc, cent)
+    # fp tie-breaks can differ on equal distances: compare distances instead
+    np.testing.assert_allclose(d2, rd2, rtol=1e-3, atol=1e-3)
+    assert float((idx == ridx).mean()) > 0.995

@@ -1,0 +1,40 @@
+"""erode/dilate Pallas kernels + van Herk variant vs oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.vector import VectorConfig
+from repro.cv import imgproc
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("lmul", [1, 2, 4])
+@pytest.mark.parametrize("shape", [(33, 70), (100, 190)])
+@pytest.mark.parametrize("r", [1, 2, 3])
+def test_erode(rng, lmul, shape, r):
+    img = jnp.asarray(rng.integers(0, 256, shape, dtype=np.uint8))
+    out = ops.erode(img, r, vc=VectorConfig(lmul=lmul))
+    want = ref.erode_ref(img, r)
+    assert (out == want).all()
+
+
+@pytest.mark.parametrize("r", [1, 3])
+def test_dilate(rng, r):
+    img = jnp.asarray(rng.integers(0, 256, (64, 100), dtype=np.uint8))
+    assert (ops.dilate(img, r) == ref.dilate_ref(img, r)).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.uint8, jnp.float32])
+@pytest.mark.parametrize("r", [1, 2, 5, 7])
+def test_vanherk(rng, dtype, r):
+    img = rng.integers(0, 256, (50, 83)).astype(np.float32)
+    img = jnp.asarray(img, dtype)
+    assert (imgproc.erode_vanherk(img, r) == ref.erode_ref(img, r)).all()
+    assert (imgproc.dilate_vanherk(img, r) == ref.dilate_ref(img, r)).all()
+
+
+def test_lmul_invariance(rng):
+    img = jnp.asarray(rng.integers(0, 256, (61, 121), dtype=np.uint8))
+    outs = [ops.erode(img, 2, vc=VectorConfig(lmul=l)) for l in (1, 2, 4, 8)]
+    for o in outs[1:]:
+        assert (o == outs[0]).all()

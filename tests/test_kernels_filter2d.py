@@ -1,0 +1,60 @@
+"""filter2d / sep_filter2d Pallas kernels vs jnp oracle: shape/dtype/lmul sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.vector import VectorConfig
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("lmul", [1, 2, 4])
+@pytest.mark.parametrize("shape", [(33, 80), (95, 201), (128, 256)])
+@pytest.mark.parametrize("k", [3, 5, 7])
+def test_filter2d_u8(rng, lmul, shape, k):
+    img = jnp.asarray(rng.integers(0, 256, shape, dtype=np.uint8))
+    kern = jnp.asarray(rng.standard_normal((k, k)) * 0.1, jnp.float32)
+    out = ops.filter2d(img, kern, vc=VectorConfig(lmul=lmul))
+    want = ref.filter2d_ref(img, kern)
+    # u8 saturate_cast can differ by 1 ulp at .5 rounding boundaries
+    assert int(jnp.max(jnp.abs(out.astype(int) - want.astype(int)))) <= 1
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("k", [3, 9, 13])
+def test_filter2d_float(rng, dtype, k):
+    img = jnp.asarray(rng.standard_normal((64, 150)), dtype)
+    kern = jnp.asarray(rng.standard_normal((k, k)) * 0.1, jnp.float32)
+    out = ops.filter2d(img, kern, vc=VectorConfig(lmul=2))
+    want = ref.filter2d_ref(img, kern)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(out.astype(jnp.float32), want.astype(jnp.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("lmul", [1, 4])
+@pytest.mark.parametrize("k", [5, 11])
+def test_sep_filter_matches_fused(rng, lmul, k):
+    img = jnp.asarray(rng.integers(0, 256, (70, 130), dtype=np.uint8))
+    k1 = ref.gaussian_kernel1d(k)
+    out = ops.sep_filter2d(img, k1, k1, vc=VectorConfig(lmul=lmul))
+    want = ref.sep_filter2d_ref(img, k1, k1)
+    assert int(jnp.max(jnp.abs(out.astype(int) - want.astype(int)))) <= 1
+
+
+def test_multichannel(rng):
+    img = jnp.asarray(rng.integers(0, 256, (40, 60, 3), dtype=np.uint8))
+    kern = jnp.asarray(rng.standard_normal((3, 3)) * 0.1, jnp.float32)
+    out = ops.filter2d(img, kern)
+    want = ref.filter2d_ref(img, kern)
+    assert out.shape == img.shape
+    assert int(jnp.max(jnp.abs(out.astype(int) - want.astype(int)))) <= 1
+
+
+def test_lmul_invariance(rng):
+    """The paper's key correctness property: register-block width (m1 vs m4)
+    must not change results — only performance."""
+    img = jnp.asarray(rng.integers(0, 256, (77, 143), dtype=np.uint8))
+    kern = jnp.asarray(rng.standard_normal((5, 5)) * 0.1, jnp.float32)
+    outs = [ops.filter2d(img, kern, vc=VectorConfig(lmul=l)) for l in (1, 2, 4, 8)]
+    for o in outs[1:]:
+        assert (o == outs[0]).all()

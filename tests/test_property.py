@@ -1,0 +1,104 @@
+"""Hypothesis property tests on system invariants."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.vector import VectorConfig
+from repro.cv import imgproc
+from repro.kernels import ops, ref
+from repro.models.layers import apply_rope, softmax_cross_entropy
+
+SETTINGS = dict(max_examples=15, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow,
+                                       hypothesis.HealthCheck.data_too_large])
+
+imgs = hnp.arrays(np.uint8, st.tuples(st.integers(16, 48), st.integers(16, 80)),
+                  elements=st.integers(0, 255))
+
+
+@hypothesis.given(img=imgs, r=st.integers(1, 3))
+@hypothesis.settings(**SETTINGS)
+def test_erosion_properties(img, r):
+    x = jnp.asarray(img)
+    e = ref.erode_ref(x, r)
+    d = ref.dilate_ref(x, r)
+    assert (e <= x).all() and (d >= x).all()           # anti-extensive / extensive
+    assert (e <= d).all()
+    # erosion by r twice == erosion by 2r (Minkowski additivity, rect SE)
+    assert (ref.erode_ref(e, r) == ref.erode_ref(x, 2 * r)).all()
+    # van Herk agrees
+    assert (imgproc.erode_vanherk(x, r) == e).all()
+
+
+@hypothesis.given(img=imgs, r=st.integers(1, 2))
+@hypothesis.settings(**SETTINGS)
+def test_erode_kernel_matches_oracle(img, r):
+    x = jnp.asarray(img)
+    assert (ops.erode(x, r, vc=VectorConfig(lmul=1)) == ref.erode_ref(x, r)).all()
+
+
+@hypothesis.given(
+    img=hnp.arrays(np.float32, st.tuples(st.integers(16, 40), st.integers(16, 60)),
+                   elements=st.floats(-10, 10, width=32)),
+    k=st.sampled_from([3, 5]),
+    data=st.data())
+@hypothesis.settings(**SETTINGS)
+def test_filter_linearity(img, k, data):
+    """filter2d(a*x) == a*filter2d(x); filter(x+y) == filter(x)+filter(y)."""
+    kern = jnp.asarray(data.draw(hnp.arrays(np.float32, (k, k),
+                                            elements=st.floats(-1, 1, width=32))))
+    x = jnp.asarray(img)
+    a = 2.5
+    f = lambda im: ref.filter2d_ref(im, kern)
+    np.testing.assert_allclose(f(a * x), a * f(x), rtol=2e-4, atol=2e-3)
+    y = jnp.ones_like(x)
+    np.testing.assert_allclose(f(x + y), f(x) + f(y), rtol=2e-4, atol=2e-3)
+
+
+@hypothesis.given(st.integers(0, 10_000), st.integers(2, 64))
+@hypothesis.settings(**SETTINGS)
+def test_rope_preserves_norm(pos, dim):
+    dim = dim * 2
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((1, 1, 1, dim)), jnp.float32)
+    y = apply_rope(x, jnp.asarray([[pos]]), theta=10000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(y), jnp.linalg.norm(x), rtol=1e-4)
+
+
+@hypothesis.given(
+    logits=hnp.arrays(np.float32, (4, 16), elements=st.floats(-20, 20, width=32)),
+    labels=hnp.arrays(np.int64, (4,), elements=st.integers(0, 15)))
+@hypothesis.settings(**SETTINGS)
+def test_cross_entropy_bounds(logits, labels):
+    loss, _ = softmax_cross_entropy(jnp.asarray(logits)[None], jnp.asarray(labels)[None])
+    assert float(loss) >= -1e-5
+    # shifting logits by a constant changes nothing
+    loss2, _ = softmax_cross_entropy(jnp.asarray(logits)[None] + 7.0, jnp.asarray(labels)[None])
+    np.testing.assert_allclose(float(loss), float(loss2), rtol=1e-3, atol=1e-5)
+
+
+@hypothesis.given(st.integers(1, 500), st.integers(2, 300))
+@hypothesis.settings(**SETTINGS)
+def test_ring_positions_invariants(pos, cache_len):
+    from repro.models.lm import ring_positions
+    kv_pos, valid = ring_positions(jnp.asarray(pos), cache_len)
+    kv_pos, valid = np.asarray(kv_pos), np.asarray(valid)
+    live = kv_pos[valid & (kv_pos < 2**29)]
+    assert (live <= pos).all()
+    assert (live % cache_len == np.arange(cache_len)[valid & (kv_pos < 2**29)]).all()
+    # the most recent cache_len positions <= pos are exactly represented
+    expect = set(range(max(0, pos - cache_len + 1), pos + 1))
+    assert set(live.tolist()) == expect
+
+
+@hypothesis.given(
+    g=hnp.arrays(np.float32, (64,), elements=st.floats(-100, 100, width=32)))
+@hypothesis.settings(**SETTINGS)
+def test_quantize_error_bound(g):
+    from repro.optim.compression import dequantize, quantize
+    x = jnp.asarray(g)
+    q, s = quantize(x)
+    err = jnp.max(jnp.abs(dequantize(q, s) - x))
+    assert float(err) <= float(s) / 2 + 1e-6   # round-to-nearest

@@ -1,0 +1,51 @@
+"""Sharding rules: divisibility guards, param specs, ZeRO/opt specs."""
+import jax
+import pytest
+
+from conftest import run_subprocess
+
+
+def test_param_specs_and_constraints():
+    out = run_subprocess("""
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType, PartitionSpec as P
+from repro.configs import get_config
+from repro.models import lm
+from repro.sharding import rules
+from functools import partial
+
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+for arch in ("gemma-7b", "deepseek-v3-671b", "starcoder2-7b", "xlstm-125m"):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(partial(lm.init_params, cfg=cfg), jax.random.key(0))
+    specs = rules.param_specs(shapes, cfg, mesh)
+    flat_sh = jax.tree_util.tree_leaves(shapes)
+    flat_sp = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_sh) == len(flat_sp)
+    sizes = rules.mesh_axis_sizes(mesh)
+    for sh, sp in zip(flat_sh, flat_sp):
+        axes = tuple(sp) + (None,) * (len(sh.shape) - len(tuple(sp)))
+        for dim, ax in zip(sh.shape, axes):
+            if ax is None: continue
+            n = 1
+            for a in ((ax,) if isinstance(ax, str) else ax):
+                n *= sizes[a]
+            assert dim % n == 0, (arch, sh.shape, sp)
+print("SPECS_OK")
+""")
+    assert "SPECS_OK" in out
+
+
+def test_constrain_prunes_indivisible():
+    out = run_subprocess("""
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType, PartitionSpec as P
+from repro.sharding import rules
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+x = jnp.ones((3, 7))   # indivisible by any axis
+with mesh:
+    y = jax.jit(lambda a: rules.constrain(a, P("data", "model"), mesh))(x)
+assert y.shape == (3, 7)
+print("PRUNE_OK")
+""")
+    assert "PRUNE_OK" in out
