@@ -1,0 +1,16 @@
+PYTHONPATH := src
+export PYTHONPATH
+
+.PHONY: test bench-quick bench pipeline-bench
+
+test:            ## tier-1 verify
+	python -m pytest -x -q
+
+bench-quick:     ## quick benchmark pass (writes BENCH_results.json)
+	python -m benchmarks.run --quick
+
+bench:           ## full benchmark pass
+	python -m benchmarks.run
+
+pipeline-bench:  ## fused-vs-staged acceptance benchmark only
+	python -m benchmarks.pipeline_bench

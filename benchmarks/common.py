@@ -10,6 +10,8 @@ import jax
 import jax.numpy as jnp
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts", "bench")
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+RESULTS_PATH = os.path.join(REPO_ROOT, "BENCH_results.json")
 
 HBM_BW = 819e9
 PEAK_FLOPS = 197e12
@@ -28,6 +30,71 @@ def best_of(fn, *args, n: int = 3, warmup: int = 1):
     return best
 
 
+def time_stats(fn, *args, n: int = 5, warmup: int = 1):
+    """best + median wall-clock over n jit-warm runs (machine-readable)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return {"best_s": ts[0], "median_s": ts[len(ts) // 2], "n": n}
+
+
+# ---------------------------------------------------------------------------
+# Cross-PR perf trajectory: every bench records entries here; flush_results()
+# merges them into BENCH_results.json at the repo root.
+# ---------------------------------------------------------------------------
+
+_RESULTS: dict = {}
+
+
+def record_result(bench: str, entry) -> None:
+    _RESULTS.setdefault(bench, []).append(entry)
+
+
+def flush_results(path: str = RESULTS_PATH) -> str | None:
+    if not _RESULTS:          # nothing measured: don't (re)write the file
+        return None
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            data = {}
+    data.update(_RESULTS)
+    data["_meta"] = {"written_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                     "backend": jax.default_backend()}
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, default=float)
+    return path
+
+
+# fused-vs-unfused timing: one pallas_call over all planes of a (B, H, W, C)
+# batch vs one launch per channel per image (the old wrapper structure)
+FUSION_BATCH, FUSION_CROP = 4, (256, 512, 3)
+
+
+def fusion_batch(stream):
+    H, W, C = FUSION_CROP
+    return jnp.stack([stream.image((H, W), channels=C, seed=b)
+                      for b in range(FUSION_BATCH)])
+
+
+def fused_vs_unfused(batch, op_fn, n: int = 3):
+    """op_fn maps a (..., H, W[, C]) image -> same shape, via the fused path."""
+    t_fused = time_stats(op_fn, batch, n=n)
+    def unfused(x):
+        return jnp.stack([jnp.stack([op_fn(x[b, :, :, c])
+                                     for c in range(x.shape[-1])], axis=-1)
+                          for b in range(x.shape[0])])
+    t_unf = time_stats(unfused, batch, n=n)
+    return t_fused, t_unf
+
+
 def kernel_structure(vc, img_shape, *, halo: int, widen: bool, extra_bytes_per_step: int = 0):
     """Structural metrics of a band kernel at a given block width (the
     TPU-side evidence for the paper's claim: wider blocks => fewer grid
@@ -37,7 +104,7 @@ def kernel_structure(vc, img_shape, *, halo: int, widen: bool, extra_bytes_per_s
     wp = W + 2 * halo
     wp += (-wp) % vc.lane
     n_bands = -(-H // rows)
-    in_bytes = 3 * rows * wp                     # u8 bands
+    in_bytes = (rows + 2 * halo) * wp            # one overlapping u8 window
     acc_bytes = (rows + 2 * halo) * wp * (4 if widen else 1) + rows * wp * (4 if widen else 1)
     vmem = 2 * (in_bytes + acc_bytes) + extra_bytes_per_step   # double-buffered
     hbm = H * wp + H * wp                        # read + write once (u8)

@@ -13,7 +13,8 @@ from repro.cv import imgproc
 from repro.data.synthetic import ImageStream
 from repro.kernels import ops, ref
 
-from .common import best_of, kernel_structure, print_table, save_json
+from .common import (best_of, fused_vs_unfused, fusion_batch, kernel_structure,
+                     print_table, record_result, save_json)
 
 RESOLUTIONS = [(1080, 1920), (2160, 3840), (4320, 7680), (8640, 15260)]
 SIZES = [1, 2, 3]          # the paper's filter half-sizes
@@ -38,7 +39,7 @@ def run(*, quick: bool = False):
             s1 = kernel_structure(VectorConfig(lmul=1), (h, w), halo=r, widen=False)
             s4 = kernel_structure(VectorConfig(lmul=4), (h, w), halo=r, widen=False)
             tuned = pick_lmul(erode_working_set(w, r))
-            rows.append({
+            row = {
                 "resolution": f"{w}x{h}", "size": r,
                 "SeqScalar_s": round(t_scalar, 4), "VanHerk_s": round(t_vh, 4),
                 "vh_speedup": round(t_scalar / t_vh, 2),
@@ -46,8 +47,18 @@ def run(*, quick: bool = False):
                 "vmem_m4_KiB": s4["vmem_bytes"] // 1024,
                 "auto_lmul": tuned.lmul,
                 "est_hbm_s": round(s4["est_hbm_s"], 5),
-            })
+            }
+            if (h, r) in ((1080, 1), (1080, 3)):
+                vc4 = VectorConfig(lmul=4)
+                tf, tu = fused_vs_unfused(
+                    fusion_batch(stream),
+                    lambda im: ops.erode(im, r, vc=vc4))
+                row["fused_s"] = round(tf["best_s"], 4)
+                row["unfused_s"] = round(tu["best_s"], 4)
+                row["fused_speedup"] = round(tu["best_s"] / tf["best_s"], 2)
+            rows.append(row)
+            record_result("erode", row)
     print_table("Paper T4-6: erosion", list(rows[0].keys()),
-                [list(r.values()) for r in rows])
+                [list(r.values()) + [""] * (len(rows[0]) - len(r)) for r in rows])
     save_json("erode", rows)
     return rows

@@ -1,0 +1,110 @@
+"""Fused stencil-pipeline benchmark: the 3-stage chain
+gauss blur -> erode -> threshold on a batched multi-channel image.
+
+Staged baseline = per-op, per-channel, per-image kernel launches (the old
+wrapper structure: every intermediate round-trips HBM, every plane pays its
+own dispatch). Fused = ONE pallas_call for the whole (B, H, W, C) batch with
+all intermediates resident in VMEM (kernels/stencil.py). Both run the same
+Pallas kernels in interpret mode on this host, so the wall-clock ratio
+isolates exactly what fusion removes: launches, pad/crop traffic, and the
+per-stage HBM round trips.
+
+Acceptance: fused lowers to exactly one pallas_call and is >= 1.3x faster
+than staged; results land in BENCH_results.json.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.vector import VectorConfig
+from repro.data.synthetic import ImageStream
+from repro.kernels import ops, ref, stencil
+
+from .common import (best_of, flush_results, print_table, record_result,
+                     save_json, time_stats)
+
+BLUR_K, ERODE_R, THRESH = 5, 1, 100.0
+
+
+def chain():
+    return (stencil.gaussian_stage(BLUR_K),
+            stencil.erode_stage(ERODE_R),
+            stencil.threshold_stage(THRESH))
+
+
+def staged_baseline(batch, vc):
+    """Per-op, per-channel, per-image: 3 launches x C channels x B images."""
+    B, H, W, C = batch.shape
+    out = []
+    for b in range(B):
+        chans = []
+        for c in range(C):
+            p = batch[b, :, :, c]
+            p = ops.gaussian_blur(p, BLUR_K, vc=vc)
+            p = ops.erode(p, ERODE_R, vc=vc)
+            p = ops.threshold(p, THRESH, vc=vc)
+            chans.append(p)
+        out.append(jnp.stack(chans, axis=-1))
+    return jnp.stack(out)
+
+
+def fused(batch, vc):
+    return stencil.fused_chain(batch, chain(), vc=vc)
+
+
+def run(*, quick: bool = False):
+    shape = (4, 256, 256, 3) if quick else (8, 512, 512, 3)
+    B, H, W, C = shape
+    stream = ImageStream()
+    batch = jnp.stack([stream.image((H, W), channels=C, seed=b) for b in range(B)])
+    vc = VectorConfig(lmul=4)
+
+    n_calls = stencil.count_pallas_calls(lambda x: fused(x, vc), batch)
+    assert n_calls == 1, f"fused chain lowered to {n_calls} pallas_calls, want 1"
+
+    fused_out = fused(batch, vc)
+    staged_out = staged_baseline(batch, vc)
+    # chain border semantics differ only inside the accumulated-halo ring
+    ph, pw = stencil.chain_halo(chain())
+    interior_equal = bool(
+        (fused_out[:, ph:-ph, pw:-pw] == staged_out[:, ph:-ph, pw:-pw]).all())
+    assert interior_equal, "fused chain diverges from staged baseline interior"
+
+    t_fused = time_stats(lambda x: fused(x, vc), batch, n=3)
+    t_staged = time_stats(lambda x: staged_baseline(x, vc), batch, n=3)
+    speedup = t_staged["best_s"] / t_fused["best_s"]
+
+    # the seed implementation (triple-BlockSpec band halo, full-band padding)
+    # as a third rung: what the per-op path cost before this engine existed
+    from . import unfused_baseline as ub
+    t_seed = time_stats(
+        lambda x: ub.seed_pipeline(x, blur_ksize=BLUR_K, erode_r=ERODE_R,
+                                   thresh=THRESH, vc=vc), batch, n=3)
+
+    launches_staged = B * C * 3
+    row = {
+        "batch": "x".join(map(str, shape)), "dtype": "u8",
+        "chain": f"gauss{BLUR_K} -> erode{ERODE_R} -> thresh",
+        "pallas_calls_fused": n_calls, "pallas_calls_staged": launches_staged,
+        "fused_best_s": round(t_fused["best_s"], 4),
+        "fused_median_s": round(t_fused["median_s"], 4),
+        "staged_best_s": round(t_staged["best_s"], 4),
+        "staged_median_s": round(t_staged["median_s"], 4),
+        "seed_staged_best_s": round(t_seed["best_s"], 4),
+        "fused_speedup": round(speedup, 2),
+        "fused_speedup_vs_seed": round(t_seed["best_s"] / t_fused["best_s"], 2),
+        "interior_bitexact": interior_equal,
+    }
+    print_table("Fused 3-stage pipeline vs staged (per-op, per-channel)",
+                list(row.keys()), [list(row.values())])
+    save_json("pipeline", [row])
+    record_result("pipeline", row)
+    if speedup < 1.3:
+        print(f"WARNING: fused speedup {speedup:.2f}x below the 1.3x target")
+    return [row]
+
+
+if __name__ == "__main__":        # PYTHONPATH=src python -m benchmarks.pipeline_bench
+    import sys
+    run(quick="--quick" in sys.argv)
+    flush_results()

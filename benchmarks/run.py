@@ -17,10 +17,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    choices=[None, "filter2d", "erode", "bow", "lmul", "roofline"])
+                    choices=[None, "filter2d", "erode", "bow", "lmul", "pipeline",
+                             "roofline"])
     args = ap.parse_args()
 
-    from benchmarks import bow_svm_bench, erode_bench, filter2d_bench, lmul_bench
+    from benchmarks import (bow_svm_bench, erode_bench, filter2d_bench,
+                            lmul_bench, pipeline_bench)
+    from benchmarks.common import flush_results
 
     if args.only in (None, "lmul"):
         lmul_bench.run(quick=args.quick)
@@ -28,8 +31,13 @@ def main():
         filter2d_bench.run(quick=args.quick)
     if args.only in (None, "erode"):
         erode_bench.run(quick=args.quick)
+    if args.only in (None, "pipeline"):
+        pipeline_bench.run(quick=args.quick)
     if args.only in (None, "bow"):
         bow_svm_bench.run(quick=args.quick)
+    written = flush_results()
+    if written:
+        print(f"\nresults -> {written}")
     if args.only in (None, "roofline"):
         art = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
         if os.path.isdir(art) and os.listdir(art):

@@ -1,0 +1,156 @@
+"""The pre-fusion (seed) kernel implementation, preserved as the benchmark
+baseline rung: per-op `pallas_call`s with the prev/cur/next triple-BlockSpec
+band halo (each band's bytes cross HBM->VMEM three times), full-band height
+padding, and per-channel / per-image Python loops.
+
+This is what `kernels/stencil.py` replaced; pipeline_bench times it against
+the fused engine. Do not use outside benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import uintr
+from repro.core.vector import VectorConfig
+
+Array = jax.Array
+
+
+def _band_specs(rows: int, wp: int):
+    """prev/cur/next band views over a band-padded (Hp, Wp) image."""
+    return [
+        pl.BlockSpec((rows, wp), lambda i: (i, 0)),        # prev
+        pl.BlockSpec((rows, wp), lambda i: (i + 1, 0)),    # cur
+        pl.BlockSpec((rows, wp), lambda i: (i + 2, 0)),    # next
+    ]
+
+
+def _assemble_band(prev_ref, cur_ref, next_ref, ph: int) -> Array:
+    cur = uintr.v_expand_f32(cur_ref[...])
+    if ph == 0:
+        return cur
+    prev = uintr.v_expand_f32(prev_ref[pl.ds(prev_ref.shape[0] - ph, ph), :])
+    nxt = uintr.v_expand_f32(next_ref[pl.ds(0, ph), :])
+    return jnp.concatenate([prev, cur, nxt], axis=0)
+
+
+def _pad_image(img: Array, rows: int, pw: int, lane: int):
+    H, W = img.shape
+    wp = pw + W + pw
+    wp_pad = (-wp) % lane
+    n_bands = -(-H // rows)
+    h_pad = n_bands * rows - H
+    x = jnp.pad(img, ((rows, rows + h_pad), (pw, pw + wp_pad)), mode="edge")
+    return x, n_bands
+
+
+def _sep_kernel(prev_ref, cur_ref, next_ref, kx_ref, ky_ref, out_ref, *, kh, kw, rows):
+    ph, pw = kh // 2, kw // 2
+    band = _assemble_band(prev_ref, cur_ref, next_ref, ph)
+    kx = kx_ref[...].astype(jnp.float32)
+    ky = ky_ref[...].astype(jnp.float32)
+    rowacc = jnp.zeros_like(band)
+    for j in range(kw):
+        rowacc = uintr.v_fma(uintr.v_shift_cols(band, pw - j), kx[j], rowacc)
+    acc = jnp.zeros((rows, band.shape[1]), jnp.float32)
+    for i in range(kh):
+        acc = uintr.v_fma(rowacc[i:i + rows, :], ky[i], acc)
+    out_ref[...] = uintr.v_pack_u8(acc)
+
+
+def _morph_kernel(prev_ref, cur_ref, next_ref, out_ref, *, r, rows):
+    cur = cur_ref[...]
+    prev = prev_ref[pl.ds(prev_ref.shape[0] - r, r), :]
+    nxt = next_ref[pl.ds(0, r), :]
+    band = jnp.concatenate([prev, cur, nxt], axis=0)
+    acc = band[0:rows, :]
+    for i in range(1, 2 * r + 1):
+        acc = uintr.v_min(acc, band[i:i + rows, :])
+    out = acc
+    for j in range(1, 2 * r + 1):
+        out = uintr.v_min(out, uintr.v_shift_cols(acc, r - j))
+    out = uintr.v_min(out, uintr.v_shift_cols(acc, r))   # seed's j == 0 case
+    out_ref[...] = out
+
+
+def _thresh_kernel(prev_ref, cur_ref, next_ref, out_ref, *, thresh, maxval):
+    x = cur_ref[...]
+    out_ref[...] = uintr.v_select(x > jnp.asarray(thresh).astype(x.dtype),
+                                  jnp.uint8(maxval), jnp.uint8(0))
+
+
+@functools.partial(jax.jit, static_argnames=("ksize", "vc"))
+def seed_gaussian_blur_2d(img: Array, ksize: int, vc: VectorConfig) -> Array:
+    from repro.kernels import ref
+    k1 = ref.gaussian_kernel1d(ksize)
+    H, W = img.shape
+    kh = kw = ksize
+    pw = kw // 2
+    rows = vc.rows(img.dtype)
+    x, n_bands = _pad_image(img, rows, pw, vc.lane)
+    wp = x.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_sep_kernel, kh=kh, kw=kw, rows=rows),
+        grid=(n_bands,),
+        in_specs=_band_specs(rows, wp) + [pl.BlockSpec((kw,), lambda i: (0,)),
+                                          pl.BlockSpec((kh,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((rows, wp), lambda i: (i + 1, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, img.dtype),
+        interpret=vc.run_interpret,
+    )(x, x, x, k1, k1)
+    return out[rows:rows + H, pw:pw + W]
+
+
+@functools.partial(jax.jit, static_argnames=("r", "vc"))
+def seed_erode_2d(img: Array, r: int, vc: VectorConfig) -> Array:
+    H, W = img.shape
+    rows = vc.rows(img.dtype)
+    x, n_bands = _pad_image(img, rows, r, vc.lane)
+    wp = x.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_morph_kernel, r=r, rows=rows),
+        grid=(n_bands,),
+        in_specs=_band_specs(rows, wp),
+        out_specs=pl.BlockSpec((rows, wp), lambda i: (i + 1, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, img.dtype),
+        interpret=vc.run_interpret,
+    )(x, x, x)
+    return out[rows:rows + H, r:r + W]
+
+
+@functools.partial(jax.jit, static_argnames=("thresh", "maxval", "vc"))
+def seed_threshold_2d(img: Array, thresh: float, maxval: float, vc: VectorConfig) -> Array:
+    H, W = img.shape
+    rows = vc.rows(img.dtype)
+    x, n_bands = _pad_image(img, rows, 0, vc.lane)
+    wp = x.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_thresh_kernel, thresh=thresh, maxval=maxval),
+        grid=(n_bands,),
+        in_specs=_band_specs(rows, wp),
+        out_specs=pl.BlockSpec((rows, wp), lambda i: (i + 1, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, img.dtype),
+        interpret=vc.run_interpret,
+    )(x, x, x)
+    return out[rows:rows + H, :W]
+
+
+def seed_pipeline(batch: Array, *, blur_ksize: int, erode_r: int, thresh: float,
+                  vc: VectorConfig) -> Array:
+    """Per-op, per-channel, per-image: the seed wrapper structure
+    (jnp.stack channel loops around single-plane pallas calls)."""
+    outs = []
+    for b in range(batch.shape[0]):
+        chans = []
+        for c in range(batch.shape[-1]):
+            p = batch[b, :, :, c]
+            p = seed_gaussian_blur_2d(p, blur_ksize, vc)
+            p = seed_erode_2d(p, erode_r, vc)
+            p = seed_threshold_2d(p, thresh, 255.0, vc)
+            chans.append(p)
+        outs.append(jnp.stack(chans, axis=-1))
+    return jnp.stack(outs)

@@ -37,3 +37,22 @@ a = ops.gaussian_blur(crop, 5, vc=VectorConfig(lmul=4))
 b = ref.sep_filter2d_ref(crop, ref.gaussian_kernel1d(5), ref.gaussian_kernel1d(5))
 print("pallas gaussian_blur matches oracle:",
       int(jnp.max(jnp.abs(a.astype(int) - b.astype(int)))) <= 1)
+
+# Fused stencil pipeline: the same blur->sharpen->erode chain as ONE
+# pallas_call over the whole batch (see EXPERIMENTS.md §Perf)
+from repro.kernels import stencil
+sharp_k = jnp.asarray([[0, -1, 0], [-1, 5, -1], [0, -1, 0]], jnp.float32)
+chain = (stencil.gaussian_stage(5), stencil.filter_stage(sharp_k),
+         stencil.erode_stage(1))
+batch = jnp.stack([crop, crop])[..., None]            # (B, H, W, C)
+stencil.reset_launch_counter()
+t0 = time.perf_counter()
+fused = stencil.fused_chain(batch, chain, vc=None)    # chain-aware autotune
+jax.block_until_ready(fused)
+print(f"fused 3-stage chain on {tuple(batch.shape)}: "
+      f"{time.perf_counter()-t0:.3f}s, {stencil.launch_count()} kernel launch")
+oracle = ref.chain_ref(batch, chain)
+# u8 saturate_cast tolerance: XLA's mul+add vs fused-multiply-add codegen
+# can differ by 1 ulp at .5 rounding boundaries
+print("fused matches chain oracle (<=1):",
+      int(jnp.max(jnp.abs(fused.astype(int) - oracle.astype(int)))) <= 1)

@@ -44,27 +44,78 @@ def _round_lane(vc: VectorConfig, width: int, halo: int) -> int:
     return wp + (-wp) % vc.lane
 
 
-def filter2d_working_set(width: int, ksize: int, in_dtype=jnp.uint8) -> WorkingSet:
-    """Band kernel: 3 input bands (in_dtype) + widened f32 band w/ halo +
-    f32 accumulator rows — mirrors kernels/filter2d.py exactly."""
-    halo = ksize // 2
-
-    def fn(vc: VectorConfig) -> int:
-        rows = vc.rows(in_dtype)             # band rows per grid step
-        wp = _round_lane(vc, width, halo)
-        in_bytes = 3 * rows * wp * jnp.dtype(in_dtype).itemsize
-        acc_bytes = (rows + 2 * halo) * wp * 4 + rows * wp * 4
-        return in_bytes + acc_bytes
-    return WorkingSet(fn)
+# ops whose intermediates widen to f32 in VMEM — the single source of truth;
+# kernels/stencil.py imports this (core stays import-free of kernels)
+WIDENING_OPS = frozenset({"filter2d", "sep_filter", "grad_mag", "affine"})
 
 
-def erode_working_set(width: int, ksize: int, in_dtype=jnp.uint8) -> WorkingSet:
-    """No widening: min/max closed over u8 — mirrors kernels/erode.py."""
-    halo = ksize
+@dataclass(frozen=True)
+class _StageShape:
+    """Minimal stage view for working-set accounting: op name + halo."""
+    op: str
+    halo: tuple
+
+
+def chain_working_set(stages, width: int, in_dtype=jnp.uint8) -> WorkingSet:
+    """Working set of a fused stage chain — mirrors kernels/stencil.py.
+
+    Per grid step: one overlapping input window of rows + 2*PH rows (PH =
+    accumulated row halo of the whole chain), then per stage its in-band
+    and out-band (f32 for widening ops, carrier dtype otherwise) since the
+    intermediates stay resident in VMEM, plus the final packed output band.
+    `stages` is duck-typed: anything with `.op` and `.halo` works.
+    """
+    halos = [tuple(s.halo) for s in stages]
+    ph = sum(h for h, _ in halos)
+    pw = sum(w for _, w in halos)
+    itemsize = jnp.dtype(in_dtype).itemsize
 
     def fn(vc: VectorConfig) -> int:
         rows = vc.rows(in_dtype)
-        wp = _round_lane(vc, width, halo)
-        itemsize = jnp.dtype(in_dtype).itemsize
-        return (3 * rows + (rows + 2 * halo) + rows) * wp * itemsize
+        wp = _round_lane(vc, width, pw)
+        total = (rows + 2 * ph) * wp * itemsize          # input window DMA
+        rem = ph
+        for s, (sh, _) in zip(stages, halos):
+            in_rows = rows + 2 * rem
+            rem -= sh
+            out_rows = rows + 2 * rem
+            size = 4 if s.op in WIDENING_OPS else itemsize
+            total += (in_rows + out_rows) * wp * size    # stage temporaries
+            total += out_rows * wp * itemsize            # packed stage output
+        total += rows * wp * itemsize                    # store band
+        return total
     return WorkingSet(fn)
+
+
+def pick_chain_lmul(stages, width: int, in_dtype=jnp.uint8, *,
+                    base: VectorConfig | None = None) -> VectorConfig:
+    """Chain-aware block-width selection: largest lmul whose accumulated-halo,
+    widened working set fits VMEM (the paper's m8 ceiling, per chain)."""
+    return pick_lmul(chain_working_set(stages, width, in_dtype), base=base)
+
+
+def plane_block(stages, width: int, n_planes: int, vc: VectorConfig,
+                in_dtype=jnp.uint8) -> int:
+    """Planes per grid step: the second register-block dimension.
+
+    Batched/multi-channel inputs give the fused kernel an extra axis to
+    amortize per-grid-step overhead over; pick the largest power-of-two
+    plane count whose combined working set still fits the VMEM budget
+    (same ceiling rule as the lmul knob)."""
+    ws = chain_working_set(stages, width, in_dtype)
+    per_plane = ws.bytes(vc)
+    p = 1
+    while (p * 2 <= n_planes and (p * 2) * per_plane <= vc.vmem_budget):
+        p *= 2
+    return p
+
+
+def filter2d_working_set(width: int, ksize: int, in_dtype=jnp.uint8) -> WorkingSet:
+    """Single filter2d stage: widened f32 band w/ halo + f32 accumulator."""
+    h = ksize // 2
+    return chain_working_set((_StageShape("filter2d", (h, h)),), width, in_dtype)
+
+
+def erode_working_set(width: int, ksize: int, in_dtype=jnp.uint8) -> WorkingSet:
+    """No widening: min/max closed over u8."""
+    return chain_working_set((_StageShape("erode", (ksize, ksize)),), width, in_dtype)

@@ -1,0 +1,26 @@
+"""Version-compat shims for the installed jax.
+
+The codebase targets the current jax API; these shims let it run on older
+releases too (the container pins jax 0.4.x):
+
+  * ``shard_map`` — moved from jax.experimental.shard_map to jax.shard_map,
+    and the replication-check kwarg was renamed check_rep -> check_vma.
+  * ``jax.sharding.AxisType`` — absent before 0.5 (handled in
+    repro.launch.mesh.make_mesh).
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """jax.shard_map / jax.experimental.shard_map.shard_map, either API."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check})

@@ -80,21 +80,23 @@ def v_select(mask: Array, a: Array, b: Array) -> Array:
 
 
 def v_shift_rows(a: Array, n: int, fill=None) -> Array:
-    """Shift tile rows by n (positive = toward higher index), replicating the
-    edge — the tile-level analogue of OpenCV's v_extract used to slide a
-    filter window (RVV: vslideup/vslidedown_vx_<t>m<L>)."""
+    """Shift tile rows (axis -2) by n (positive = toward higher index),
+    replicating the edge — the tile-level analogue of OpenCV's v_extract used
+    to slide a filter window (RVV: vslideup/vslidedown_vx_<t>m<L>). Leading
+    axes (plane blocks) pass through untouched."""
     if n == 0:
         return a
-    return jnp.roll(a, n, axis=0) if fill is None else _shift_fill(a, n, 0, fill)
+    return jnp.roll(a, n, axis=-2) if fill is None else _shift_fill(a, n, -2, fill)
 
 
 def v_shift_cols(a: Array, n: int, fill=None) -> Array:
     if n == 0:
         return a
-    return jnp.roll(a, n, axis=1) if fill is None else _shift_fill(a, n, 1, fill)
+    return jnp.roll(a, n, axis=-1) if fill is None else _shift_fill(a, n, -1, fill)
 
 
 def _shift_fill(a, n, axis, fill):
+    axis = axis % a.ndim
     rolled = jnp.roll(a, n, axis=axis)
     idx = jnp.arange(a.shape[axis])
     mask = (idx < n) if n > 0 else (idx >= a.shape[axis] + n)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.core.vector import VectorConfig, DEFAULT
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.kernels import stencil
 
 Array = jax.Array
 
@@ -23,7 +24,20 @@ gaussian_blur = kops.gaussian_blur
 gaussian_filter2d = kops.gaussian_filter2d
 erode = kops.erode
 dilate = kops.dilate
+threshold = kops.threshold
 gaussian_kernel1d = kref.gaussian_kernel1d
+fused_chain = stencil.fused_chain
+
+
+def preprocess_bow(imgs: Array, *, blur_ksize: int = 5, sigma: float | None = None,
+                   erode_r: int = 1, vc: VectorConfig | None = None) -> Array:
+    """BoW preprocessing (blur -> erode -> gradient magnitude) as ONE fused
+    Pallas launch over the whole (B, H, W, C) batch — every intermediate
+    stays in VMEM instead of round-tripping HBM per op/channel/image."""
+    chain = (stencil.gaussian_stage(blur_ksize, sigma),
+             stencil.erode_stage(erode_r),
+             stencil.grad_stage())
+    return stencil.fused_chain(imgs, chain, vc=vc)
 
 
 def rgb_to_gray(img: Array) -> Array:

@@ -1,80 +1,35 @@
-"""Pallas TPU kernel: morphological erosion / dilation (OpenCV erode).
+"""Morphological erosion / dilation (OpenCV erode) — thin wrappers over
+single-stage chains of the fused stencil engine (see stencil.py).
 
-Same band decomposition as filter2d (see there). No widening: u8 stays u8
-(min/max are closed over the type), so the tile packs 32 sublanes/VREG and
-the lmul ceiling is set purely by band bytes.
+Same band decomposition as filter2d. No widening: u8 stays u8 (min/max are
+closed over the type), so the tile packs 32 sublanes/VREG and the lmul
+ceiling is set purely by band bytes. The in-kernel reduction is separable
+(column min over 2r+1 rows, then one uniform lane-shift loop over 2r+1
+offsets — stencil._apply_morph), pinned against kernels/ref.py by
+tests/test_stencil.py.
 
-Variants:
-  erode_direct  — (2r+1)^2 v_min ops per pixel (the paper's erode()).
-  The van Herk–Gil-Werman O(1)-per-pixel separable variant lives in
-  repro.cv.imgproc (pure jnp — an *algorithmic* beyond-paper optimization
-  measured by wall-clock in benchmarks/erode_bench.py).
+The van Herk–Gil-Werman O(1)-per-pixel separable variant lives in
+repro.cv.imgproc (pure jnp — an *algorithmic* beyond-paper optimization
+measured by wall-clock in benchmarks/erode_bench.py).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.core import uintr
 from repro.core.vector import VectorConfig
 
-from .filter2d import _band_specs, _pad_image
+from . import stencil
 
 Array = jax.Array
 
 
-def _morph_kernel(prev_ref, cur_ref, next_ref, out_ref, *, r, rows, op):
-    ph = r
-    cur = cur_ref[...]
-    if ph:
-        prev = prev_ref[pl.ds(prev_ref.shape[0] - ph, ph), :]
-        nxt = next_ref[pl.ds(0, ph), :]
-        band = jnp.concatenate([prev, cur, nxt], axis=0)
-    else:
-        band = cur
-    red = uintr.v_min if op == "erode" else uintr.v_max
-    # separable within the kernel: column min over 2r+1 rows, then row min.
-    acc = band[0:rows, :]
-    for i in range(1, 2 * r + 1):
-        acc = red(acc, band[i:i + rows, :])
-    out = acc
-    for j in range(1, 2 * r + 1):
-        out = red(out, uintr.v_shift_cols(acc, r - j))
-    # j == 0 shift is r: include it
-    out = red(out, uintr.v_shift_cols(acc, r))
-    out_ref[...] = out
-
-
-@functools.partial(jax.jit, static_argnames=("r", "vc", "op"))
-def _morph_2d(img: Array, r: int, vc: VectorConfig, op: str) -> Array:
-    H, W = img.shape
-    rows = vc.rows(img.dtype)
-    x, n_bands = _pad_image(img, rows, r, vc.lane)
-    wp = x.shape[1]
-    out = pl.pallas_call(
-        functools.partial(_morph_kernel, r=r, rows=rows, op=op),
-        grid=(n_bands,),
-        in_specs=_band_specs(rows, wp),
-        out_specs=pl.BlockSpec((rows, wp), lambda i: (i + 1, 0)),
-        out_shape=jax.ShapeDtypeStruct(x.shape, img.dtype),
-        interpret=vc.run_interpret,
-    )(x, x, x)
-    return out[rows:rows + H, r:r + W]
-
-
 def erode(img: Array, ksize: int, *, vc: VectorConfig = VectorConfig()) -> Array:
-    """OpenCV erode with a (2*ksize+1)^2 rectangular element."""
-    if img.ndim == 3:
-        return jnp.stack([_morph_2d(img[..., c], ksize, vc, "erode")
-                          for c in range(img.shape[2])], axis=-1)
-    return _morph_2d(img, ksize, vc, "erode")
+    """OpenCV erode with a (2*ksize+1)^2 rectangular element.
+
+    (H, W), (H, W, C) or (B, H, W, C); bit-identical to ref.erode_ref.
+    """
+    return stencil.fused_chain(img, (stencil.erode_stage(ksize),), vc=vc)
 
 
 def dilate(img: Array, ksize: int, *, vc: VectorConfig = VectorConfig()) -> Array:
-    if img.ndim == 3:
-        return jnp.stack([_morph_2d(img[..., c], ksize, vc, "dilate")
-                          for c in range(img.shape[2])], axis=-1)
-    return _morph_2d(img, ksize, vc, "dilate")
+    return stencil.fused_chain(img, (stencil.dilate_stage(ksize),), vc=vc)

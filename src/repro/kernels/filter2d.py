@@ -1,147 +1,44 @@
-"""Pallas TPU kernel: 2D image filtering (OpenCV filter2D / GaussianBlur).
+"""2D image filtering (OpenCV filter2D / GaussianBlur) — thin wrappers over
+single-stage chains of the fused stencil engine (see stencil.py).
 
-Band decomposition: a 1D grid over row bands of `rows = vc.rows(dtype)`
-(= sublane-packing x lmul — the paper's register-block knob). Row halo is
-assembled from three BlockSpec views of the same (band-padded) image —
-previous/current/next band — so BlockSpecs stay uniform and every DMA is a
-contiguous band. Column halo is handled by pre-padding the width and
-rotating lanes in-register (uintr.v_shift_cols == RVV vslide).
+Band decomposition: a (planes, bands) grid where `rows = vc.rows(dtype)`
+(= sublane-packing x lmul — the paper's register-block knob). The row halo
+arrives in the same DMA as the band via one overlapping-window BlockSpec
+(`pl.Unblocked`); the column halo is handled by pre-padding the width and
+rotating lanes in-register (uintr.v_shift_cols == RVV vslide). Channels and
+batch images are grid dimensions, not Python loops, so a (B, H, W, C)
+input is one `pallas_call`.
 
 Widening: u8 bands expand to f32 accumulators in VMEM — the exact
 extended-precision pattern (m4 -> m8) that sets the paper's block-width
 ceiling; repro.core.autotune reproduces that rule against the VMEM budget.
 
 Two variants:
-  filter2d_direct — kh*kw FMAs per pixel (the paper's filter2D).
-  filter2d_sep    — fused separable row+column pass in one VMEM residency
-                    (kh+kw FMAs): a beyond-paper optimization enabled by
-                    TPU's large VMEM (EXPERIMENTS.md §Perf).
+  filter2d     — kh*kw FMAs per pixel (the paper's filter2D).
+  sep_filter2d — fused separable row+column pass in one VMEM residency
+                 (kh+kw FMAs): a beyond-paper optimization enabled by
+                 TPU's large VMEM (EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.core import uintr
 from repro.core.vector import VectorConfig
+
+from . import stencil
 
 Array = jax.Array
 
 
-def _band_specs(rows: int, wp: int):
-    """prev/cur/next band views over a band-padded (Hp, Wp) image."""
-    return [
-        pl.BlockSpec((rows, wp), lambda i: (i, 0)),        # prev
-        pl.BlockSpec((rows, wp), lambda i: (i + 1, 0)),    # cur
-        pl.BlockSpec((rows, wp), lambda i: (i + 2, 0)),    # next
-    ]
-
-
-def _assemble_band(prev_ref, cur_ref, next_ref, ph: int) -> Array:
-    """(rows + 2*ph, Wp) fp32 working band."""
-    cur = uintr.v_expand_f32(cur_ref[...])
-    if ph == 0:
-        return cur
-    prev = uintr.v_expand_f32(prev_ref[pl.ds(prev_ref.shape[0] - ph, ph), :])
-    nxt = uintr.v_expand_f32(next_ref[pl.ds(0, ph), :])
-    return jnp.concatenate([prev, cur, nxt], axis=0)
-
-
-def _store(out_ref, acc: Array, out_dtype):
-    if out_dtype == jnp.uint8:
-        out_ref[...] = uintr.v_pack_u8(acc)
-    else:
-        out_ref[...] = acc.astype(out_dtype)
-
-
-def _direct_kernel(prev_ref, cur_ref, next_ref, k_ref, out_ref, *, kh, kw, rows, out_dtype):
-    ph, pw = kh // 2, kw // 2
-    band = _assemble_band(prev_ref, cur_ref, next_ref, ph)
-    kern = k_ref[...].astype(jnp.float32)
-    acc = jnp.zeros((rows, band.shape[1]), jnp.float32)
-    for i in range(kh):
-        rows_i = band[i:i + rows, :]
-        for j in range(kw):
-            shifted = uintr.v_shift_cols(rows_i, pw - j)
-            acc = uintr.v_fma(shifted, kern[i, j], acc)
-    _store(out_ref, acc, out_dtype)
-
-
-def _sep_kernel(prev_ref, cur_ref, next_ref, kx_ref, ky_ref, out_ref, *, kh, kw, rows, out_dtype):
-    """Fused separable: row pass over rows+2ph, column pass down to rows."""
-    ph, pw = kh // 2, kw // 2
-    band = _assemble_band(prev_ref, cur_ref, next_ref, ph)
-    kx = kx_ref[...].astype(jnp.float32)
-    ky = ky_ref[...].astype(jnp.float32)
-    rowacc = jnp.zeros_like(band)
-    for j in range(kw):
-        rowacc = uintr.v_fma(uintr.v_shift_cols(band, pw - j), kx[j], rowacc)
-    acc = jnp.zeros((rows, band.shape[1]), jnp.float32)
-    for i in range(kh):
-        acc = uintr.v_fma(rowacc[i:i + rows, :], ky[i], acc)
-    _store(out_ref, acc, out_dtype)
-
-
-def _pad_image(img: Array, rows: int, pw: int, lane: int) -> tuple[Array, int]:
-    """Edge-pad: width by pw (+ to lane multiple), height by one full band on
-    each side (+ to rows multiple). Returns padded image and band count."""
-    H, W = img.shape
-    wp = pw + W + pw
-    wp_pad = (-wp) % lane
-    n_bands = -(-H // rows)
-    h_pad = n_bands * rows - H
-    x = jnp.pad(img, ((rows, rows + h_pad), (pw, pw + wp_pad)), mode="edge")
-    return x, n_bands
-
-
-@functools.partial(jax.jit, static_argnames=("vc", "variant"))
-def _filter2d_2d(img: Array, kernel, vc: VectorConfig, variant: str) -> Array:
-    H, W = img.shape
-    if variant == "sep":
-        kx, ky = kernel
-        kh, kw = ky.shape[0], kx.shape[0]
-    else:
-        kh, kw = kernel.shape
-    ph, pw = kh // 2, kw // 2
-    rows = vc.rows(img.dtype)
-    x, n_bands = _pad_image(img, rows, pw, vc.lane)
-    wp = x.shape[1]
-    out_dtype = img.dtype
-
-    if variant == "sep":
-        kern_args = (kx.astype(jnp.float32), ky.astype(jnp.float32))
-        kern_specs = [pl.BlockSpec((kw,), lambda i: (0,)), pl.BlockSpec((kh,), lambda i: (0,))]
-        body = functools.partial(_sep_kernel, kh=kh, kw=kw, rows=rows, out_dtype=out_dtype)
-    else:
-        kern_args = (kernel.astype(jnp.float32),)
-        kern_specs = [pl.BlockSpec((kh, kw), lambda i: (0, 0))]
-        body = functools.partial(_direct_kernel, kh=kh, kw=kw, rows=rows, out_dtype=out_dtype)
-
-    out = pl.pallas_call(
-        body,
-        grid=(n_bands,),
-        in_specs=_band_specs(rows, wp) + kern_specs,
-        out_specs=pl.BlockSpec((rows, wp), lambda i: (i + 1, 0)),
-        out_shape=jax.ShapeDtypeStruct(x.shape, out_dtype),
-        interpret=vc.run_interpret,
-    )(x, x, x, *kern_args)
-    return out[rows:rows + H, pw:pw + W]
-
-
 def filter2d(img: Array, kernel: Array, *, vc: VectorConfig = VectorConfig()) -> Array:
-    """OpenCV filter2D (correlation, BORDER_REPLICATE). (H,W) or (H,W,C)."""
-    if img.ndim == 3:
-        return jnp.stack([_filter2d_2d(img[..., c], kernel, vc, "direct")
-                          for c in range(img.shape[2])], axis=-1)
-    return _filter2d_2d(img, kernel, vc, "direct")
+    """OpenCV filter2D (correlation, BORDER_REPLICATE).
+
+    (H, W), (H, W, C) or (B, H, W, C); bit-identical to ref.filter2d_ref.
+    """
+    return stencil.fused_chain(img, (stencil.filter_stage(kernel),), vc=vc)
 
 
-def sep_filter2d(img: Array, kx: Array, ky: Array, *, vc: VectorConfig = VectorConfig()) -> Array:
+def sep_filter2d(img: Array, kx: Array, ky: Array, *,
+                 vc: VectorConfig = VectorConfig()) -> Array:
     """Fused separable filter (single HBM round-trip row+col pass)."""
-    if img.ndim == 3:
-        return jnp.stack([_filter2d_2d(img[..., c], (kx, ky), vc, "sep")
-                          for c in range(img.shape[2])], axis=-1)
-    return _filter2d_2d(img, (kx, ky), vc, "sep")
+    return stencil.fused_chain(img, (stencil.sep_filter_stage(kx, ky),), vc=vc)

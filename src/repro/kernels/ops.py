@@ -17,6 +17,16 @@ from .attention import flash_attention  # noqa: F401
 from .bow import bow_assign  # noqa: F401
 from .erode import dilate, erode  # noqa: F401
 from .filter2d import filter2d, sep_filter2d  # noqa: F401
+from .stencil import (fused_chain, Stage,  # noqa: F401
+                      affine_stage, dilate_stage, erode_stage, filter_stage,
+                      gaussian_stage, grad_stage, sep_filter_stage,
+                      threshold_stage)
+
+
+def threshold(img, thresh: float, maxval: float = 255.0, *,
+              vc: VectorConfig = DEFAULT):
+    """OpenCV THRESH_BINARY: maxval where img > thresh else 0."""
+    return fused_chain(img, (threshold_stage(thresh, maxval),), vc=vc)
 
 
 def gaussian_blur(img, ksize: int, sigma: float | None = None, *,

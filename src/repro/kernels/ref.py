@@ -85,6 +85,79 @@ def dilate_ref(img: Array, ksize: int) -> Array:
     return out.astype(img.dtype)
 
 
+def _saturate(out: Array, dtype) -> Array:
+    if dtype == jnp.uint8:
+        return jnp.clip(jnp.round(out), 0, 255).astype(jnp.uint8)
+    return out.astype(dtype)
+
+
+def chain_ref(img: Array, stages) -> Array:
+    """Oracle for kernels.stencil.fused_chain (duck-typed Stage objects).
+
+    Semantics: compute-on-extended-domain — the input is edge-padded once by
+    the chain's accumulated halo and every stage runs valid-mode on the
+    extended array, with the per-stage carrier-dtype saturation the fused
+    kernel applies. For a single stage this coincides with the per-op refs
+    above; multi-stage chains differ from staged per-op execution only
+    inside the accumulated-halo border ring (see EXPERIMENTS.md §Perf).
+    """
+    def plane_chain(x):                            # x: (h, w) carrier dtype
+        for s in stages:
+            ph, pw = s.halo
+            h, w = x.shape[0] - 2 * ph, x.shape[1] - 2 * pw
+            if s.op == "filter2d":
+                k = s.weights[0].astype(jnp.float32)
+                kh, kw = k.shape
+                xf = x.astype(jnp.float32)
+                acc = sum(k[i, j] * xf[i:i + h, j:j + w]
+                          for i in range(kh) for j in range(kw))
+                x = _saturate(acc, img.dtype)
+            elif s.op == "sep_filter":
+                kx = s.weights[0].astype(jnp.float32)
+                ky = s.weights[1].astype(jnp.float32)
+                xf = x.astype(jnp.float32)
+                row = sum(kx[j] * xf[:, j:j + w] for j in range(kx.shape[0]))
+                acc = sum(ky[i] * row[i:i + h] for i in range(ky.shape[0]))
+                x = _saturate(acc, img.dtype)
+            elif s.op in ("erode", "dilate"):
+                red = jnp.minimum if s.op == "erode" else jnp.maximum
+                acc = x[0:h, 0:w]
+                for i in range(2 * ph + 1):
+                    for j in range(2 * pw + 1):
+                        acc = red(acc, x[i:i + h, j:j + w])
+                x = acc
+            elif s.op == "threshold":
+                t, maxval = s.static
+                t = jnp.asarray(t).astype(x.dtype)
+                x = jnp.where(x > t, jnp.asarray(maxval).astype(img.dtype),
+                              jnp.asarray(0).astype(img.dtype))
+            elif s.op == "affine":
+                scale, offset = s.static
+                x = _saturate(x.astype(jnp.float32) * scale + offset, img.dtype)
+            elif s.op == "grad_mag":
+                xf = x.astype(jnp.float32)
+                dy = (xf[2:2 + h, 1:1 + w] - xf[0:h, 1:1 + w]) * 0.5
+                dx = (xf[1:1 + h, 2:2 + w] - xf[1:1 + h, 0:w]) * 0.5
+                x = _saturate(jnp.sqrt(dx * dx + dy * dy), img.dtype)
+            else:
+                raise ValueError(f"chain_ref: unknown op {s.op!r}")
+        return x
+
+    PH = sum(s.halo[0] for s in stages)
+    PW = sum(s.halo[1] for s in stages)
+
+    def one_image(im):                              # (H, W) or (H, W, C)
+        x = _pad_replicate(im, PH, PW)
+        if x.ndim == 2:
+            return plane_chain(x)
+        return jnp.stack([plane_chain(x[..., c]) for c in range(x.shape[-1])],
+                         axis=-1)
+
+    if img.ndim == 4:
+        return jnp.stack([one_image(img[b]) for b in range(img.shape[0])])
+    return one_image(img)
+
+
 def bow_assign_ref(desc: Array, centroids: Array) -> tuple[Array, Array]:
     """Nearest-centroid assignment. desc (N, D) f32, centroids (K, D) f32
     -> (assignments (N,) int32, min squared distance (N,) f32)."""

@@ -1,0 +1,425 @@
+"""Fused multi-stage stencil-pipeline engine — one Pallas launch, one VMEM
+residency per image pipeline.
+
+The paper's lever is widening the register block (LMUL m1 -> m4) so
+per-instruction overhead amortizes against the register budget. These
+stencils are memory-bound (arXiv 2305.09266), so the next lever on TPU is
+eliminating redundant HBM traffic: a chain of image ops (blur -> erode ->
+threshold) classically costs one kernel launch *per op, per channel, per
+image*, with every intermediate doing a full HBM round trip. This module
+compiles a *chain* of stages over a batched, multi-channel image into a
+**single `pallas_call`**:
+
+  * the input is normalized to planes `(N, H, W)` (N = batch x channels) and
+    the grid is `(N, n_bands)` — the per-channel / per-image Python loops of
+    the old wrappers become grid dimensions;
+  * each grid step DMAs **one** overlapping window of
+    `rows + 2*PH` input rows (`pl.Unblocked` indexing), where `PH` is the
+    *accumulated* row halo of the whole chain — replacing the old
+    prev/cur/next triple-BlockSpec trick, so a band's bytes cross HBM->VMEM
+    once instead of three times;
+  * every stage runs in-register/in-VMEM on the band, consuming its own halo
+    (the band shrinks by the stage halo per side), and only the final
+    `rows`-row result is written back to HBM.
+
+Border semantics: the chain is computed on the edge-replicated *extended
+domain* — stage s sees stage s-1's values computed at out-of-image
+coordinates from the edge-padded input, not an edge-replication of stage
+s-1's output. For a single stage this is exactly OpenCV BORDER_REPLICATE
+(bit-identical to `kernels/ref.py`); for multi-stage chains it matches
+`ref.chain_ref`, and differs from the staged baseline only inside the
+accumulated-halo border ring. See EXPERIMENTS.md §Perf for the band/halo
+diagram.
+
+Block-width selection: `vc=None` autotunes via
+`repro.core.autotune.chain_working_set` — the largest lmul whose
+accumulated-halo, widened working set fits VMEM (the paper's m8 ceiling,
+chain-aware).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import uintr
+from repro.core.autotune import WIDENING_OPS  # noqa: F401  (re-export)
+from repro.core.vector import VectorConfig
+
+from . import ref
+
+Array = jax.Array
+# number of tap arrays each op carries as pallas inputs
+_N_WEIGHTS = {"filter2d": 1, "sep_filter": 2, "erode": 0, "dilate": 0,
+              "threshold": 0, "affine": 0, "grad_mag": 0}
+
+
+# ---------------------------------------------------------------------------
+# Stage IR
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Stage:
+    """One pipeline stage: `op` + hashable static params + tap arrays.
+
+    `static` is baked into the jit/pallas trace; `weights` (filter taps) are
+    ordinary traced inputs so re-running with new taps does not recompile.
+    """
+    op: str
+    static: tuple = ()
+    weights: tuple = field(default_factory=tuple)
+
+    def __post_init__(self):
+        if self.op not in _N_WEIGHTS:
+            raise ValueError(f"unknown stage op {self.op!r}")
+        if len(self.weights) != _N_WEIGHTS[self.op]:
+            raise ValueError(f"{self.op} takes {_N_WEIGHTS[self.op]} weight "
+                             f"arrays, got {len(self.weights)}")
+
+    @property
+    def halo(self) -> tuple[int, int]:
+        """(row, col) halo this stage consumes per side."""
+        if self.op == "filter2d":
+            kh, kw = self.weights[0].shape
+            return kh // 2, kw // 2
+        if self.op == "sep_filter":
+            kx, ky = self.weights
+            return ky.shape[0] // 2, kx.shape[0] // 2
+        if self.op in ("erode", "dilate"):
+            return self.static[0], self.static[0]
+        if self.op == "grad_mag":
+            return 1, 1
+        return 0, 0
+
+
+def filter_stage(kernel: Array) -> Stage:
+    """Direct 2D correlation with an odd (kh, kw) tap matrix."""
+    kernel = jnp.asarray(kernel, jnp.float32)
+    return Stage("filter2d", weights=(kernel,))
+
+
+def sep_filter_stage(kx: Array, ky: Array) -> Stage:
+    """Separable filter: row taps kx (kw,), then column taps ky (kh,)."""
+    return Stage("sep_filter",
+                 weights=(jnp.asarray(kx, jnp.float32), jnp.asarray(ky, jnp.float32)))
+
+
+def gaussian_stage(ksize: int, sigma: float | None = None) -> Stage:
+    """OpenCV GaussianBlur as a separable stage."""
+    k1 = ref.gaussian_kernel1d(ksize, sigma)
+    return sep_filter_stage(k1, k1)
+
+
+def erode_stage(r: int) -> Stage:
+    """Rectangular (2r+1)^2 erosion."""
+    return Stage("erode", static=(int(r),))
+
+
+def dilate_stage(r: int) -> Stage:
+    return Stage("dilate", static=(int(r),))
+
+
+def threshold_stage(thresh: float, maxval: float = 255.0) -> Stage:
+    """Binary threshold: maxval where x > thresh else 0 (OpenCV THRESH_BINARY)."""
+    return Stage("threshold", static=(float(thresh), float(maxval)))
+
+
+def affine_stage(scale: float, offset: float = 0.0) -> Stage:
+    """Pointwise saturating scale*x + offset (OpenCV convertScaleAbs-style)."""
+    return Stage("affine", static=(float(scale), float(offset)))
+
+
+def grad_stage() -> Stage:
+    """Central-difference gradient magnitude sqrt(dx^2 + dy^2)."""
+    return Stage("grad_mag")
+
+
+def chain_halo(stages) -> tuple[int, int]:
+    """Accumulated (row, col) halo of the whole chain."""
+    hs = [s.halo for s in stages]
+    return sum(h for h, _ in hs), sum(w for _, w in hs)
+
+
+# ---------------------------------------------------------------------------
+# In-kernel stage bodies — each maps an (R_in, WP) band to (R_in - 2*ph, WP)
+# in the carrier dtype; widened f32 intermediates never leave VMEM.
+# ---------------------------------------------------------------------------
+
+def _pack(acc: Array, carrier) -> Array:
+    if carrier == jnp.uint8:
+        return uintr.v_pack_u8(acc)
+    return acc.astype(carrier)
+
+
+def _out_shape(band, out_rows):
+    return band.shape[:-2] + (out_rows, band.shape[-1])
+
+
+def _expand_once(band, interp: bool):
+    """Widen to f32 and, on the interpret (CPU) path, pin the result to a
+    buffer: the expanded band is consumed by every filter tap, and XLA-CPU
+    loop fusion would otherwise re-execute the slice+convert per tap."""
+    x = uintr.v_expand_f32(band)
+    return _materialize(x) if interp else x
+
+
+def _apply_filter2d(band, wts, static, carrier, *, interp=False):
+    (kern,) = wts
+    kh, kw = kern.shape
+    ph, pw = kh // 2, kw // 2
+    x = _expand_once(band, interp)
+    out_rows = band.shape[-2] - 2 * ph
+    kern = kern.astype(jnp.float32)
+    acc = jnp.zeros(_out_shape(band, out_rows), jnp.float32)
+    for i in range(kh):
+        rows_i = x[..., i:i + out_rows, :]
+        if interp:
+            rows_i = _materialize(rows_i)   # kw consumers (see _expand_once)
+        for j in range(kw):
+            acc = uintr.v_fma(uintr.v_shift_cols(rows_i, pw - j), kern[i, j], acc)
+    return _pack(acc, carrier)
+
+
+def _apply_sep_filter(band, wts, static, carrier, *, interp=False):
+    kx, ky = wts
+    kh, kw = ky.shape[0], kx.shape[0]
+    ph, pw = kh // 2, kw // 2
+    x = _expand_once(band, interp)
+    kx = kx.astype(jnp.float32)
+    ky = ky.astype(jnp.float32)
+    rowacc = jnp.zeros_like(x)
+    for j in range(kw):
+        rowacc = uintr.v_fma(uintr.v_shift_cols(x, pw - j), kx[j], rowacc)
+    out_rows = band.shape[-2] - 2 * ph
+    acc = jnp.zeros(_out_shape(band, out_rows), jnp.float32)
+    for i in range(kh):
+        acc = uintr.v_fma(rowacc[..., i:i + out_rows, :], ky[i], acc)
+    return _pack(acc, carrier)
+
+
+def _morph_identity(dtype, op):
+    """Identity element of min/max for the carrier dtype."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.inf if op == "erode" else -jnp.inf
+    info = jnp.iinfo(dtype)
+    return info.max if op == "erode" else info.min
+
+
+def _apply_morph(band, wts, static, carrier, *, op, interp=False):
+    (r,) = static
+    if r == 0:
+        return band
+    if interp:
+        # Interpret (CPU emulation) lowering: one windowed reduction. Rows
+        # consume the halo (valid); columns keep full width by padding with
+        # the min/max identity — those edge lanes lie inside the chain's
+        # accumulated column halo and never reach the crop. reduce_window
+        # materializes its operand, which stops XLA-CPU loop fusion from
+        # re-deriving the whole upstream stage once per window tap
+        # (O(window^2) recompute); Mosaic cannot lower reduce_window, so the
+        # TPU path below keeps the paper's v_min/vslide intrinsic form.
+        init = jnp.asarray(_morph_identity(band.dtype, op), band.dtype)
+        comp = jax.lax.min if op == "erode" else jax.lax.max
+        window = (1,) * (band.ndim - 2) + (2 * r + 1, 2 * r + 1)
+        pad = ((0, 0),) * (band.ndim - 1) + ((r, r),)
+        return jax.lax.reduce_window(band, init, comp, window,
+                                     (1,) * band.ndim, pad)
+    red = uintr.v_min if op == "erode" else uintr.v_max
+    out_rows = band.shape[-2] - 2 * r
+    # separable in-register: column min/max over 2r+1 rows, then one uniform
+    # lane-shift loop over the 2r+1 column offsets (j == 0 folded in).
+    acc = band[..., 0:out_rows, :]
+    for i in range(1, 2 * r + 1):
+        acc = red(acc, band[..., i:i + out_rows, :])
+    out = None
+    for j in range(2 * r + 1):
+        shifted = uintr.v_shift_cols(acc, r - j)
+        out = shifted if out is None else red(out, shifted)
+    return out
+
+
+def _apply_threshold(band, wts, static, carrier, *, interp=False):
+    thresh, maxval = static
+    t = jnp.asarray(thresh).astype(band.dtype)
+    hi = jnp.asarray(maxval).astype(carrier)
+    lo = jnp.asarray(0).astype(carrier)
+    return uintr.v_select(band > t, hi, lo)
+
+
+def _apply_affine(band, wts, static, carrier, *, interp=False):
+    scale, offset = static
+    acc = uintr.v_fma(uintr.v_expand_f32(band), jnp.float32(scale), jnp.float32(offset))
+    return _pack(acc, carrier)
+
+
+def _apply_grad_mag(band, wts, static, carrier, *, interp=False):
+    x = _expand_once(band, interp)
+    out_rows = band.shape[-2] - 2
+    dy = (x[..., 2:2 + out_rows, :] - x[..., 0:out_rows, :]) * 0.5
+    dx = (uintr.v_shift_cols(x, -1) - uintr.v_shift_cols(x, 1))[..., 1:1 + out_rows, :] * 0.5
+    return _pack(jnp.sqrt(dx * dx + dy * dy), carrier)
+
+
+_APPLY = {
+    "filter2d": _apply_filter2d,
+    "sep_filter": _apply_sep_filter,
+    "erode": functools.partial(_apply_morph, op="erode"),
+    "dilate": functools.partial(_apply_morph, op="dilate"),
+    "threshold": _apply_threshold,
+    "affine": _apply_affine,
+    "grad_mag": _apply_grad_mag,
+}
+
+
+def _materialize(band: Array) -> Array:
+    """Identity reduce_window: pins the band to a buffer on XLA CPU, so the
+    per-step block read (a dynamic_slice) is not re-executed once per
+    consuming filter tap by loop fusion (invisible in cost_analysis;
+    lax.optimization_barrier gets stripped on CPU)."""
+    return jax.lax.reduce_window(band, jnp.asarray(0, band.dtype), jax.lax.add,
+                                 (1,) * band.ndim, (1,) * band.ndim, "VALID")
+
+
+def _chain_kernel(x_ref, *refs, spec, rows, carrier, interp):
+    out_ref = refs[-1]
+    w_refs = refs[:-1]
+    band = x_ref[...]                    # (P, rows + 2*PH, WP) carrier dtype
+    wi = 0
+    for op, static in spec:
+        nw = _N_WEIGHTS[op]
+        wts = tuple(w_refs[wi + t][...] for t in range(nw))
+        wi += nw
+        band = _APPLY[op](band, wts, static, carrier, interp=interp)
+    out_ref[...] = band                  # (P, rows, WP)
+
+
+# ---------------------------------------------------------------------------
+# Chain compiler: one pallas_call over (N planes, n_bands)
+# ---------------------------------------------------------------------------
+
+# pallas_call launches issued by this module (one per fused_chain invocation;
+# the jitted program of one invocation contains exactly one pallas_call —
+# see count_pallas_calls for the jaxpr-level check).
+_LAUNCHES = 0
+
+
+def reset_launch_counter() -> None:
+    global _LAUNCHES
+    _LAUNCHES = 0
+
+
+def launch_count() -> int:
+    return _LAUNCHES
+
+
+def count_pallas_calls(fn, *args, **kwargs) -> int:
+    """Number of pallas_call equations in fn's jaxpr (recursing into calls)."""
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                if isinstance(v, jax.core.ClosedJaxpr):
+                    n += walk(v.jaxpr)
+                elif isinstance(v, jax.core.Jaxpr):
+                    n += walk(v)
+        return n
+    return walk(jax.make_jaxpr(fn)(*args, **kwargs).jaxpr)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "vc"))
+def _chain_planes(planes: Array, weights: tuple, spec: tuple, vc: VectorConfig) -> Array:
+    """(N, H, W) planes -> (N, H, W), the whole chain in one pallas_call.
+
+    Grid = (N / P, n_bands) where P is the plane block (autotune.plane_block):
+    the batch/channel axis is the second register-block dimension, amortizing
+    per-grid-step overhead the same way lmul widens the band."""
+    from repro.core.autotune import plane_block
+
+    stages = _respec(spec, weights)
+    N, H, W = planes.shape
+    ph, pw = chain_halo(stages)
+    rows = vc.rows(planes.dtype)
+    n_bands = -(-H // rows)
+    P = plane_block(stages, W, N, vc, in_dtype=planes.dtype)
+    n_pad = (-N) % P
+
+    wp = pw + W + pw
+    wp += (-wp) % vc.lane
+    x = jnp.pad(planes,
+                ((0, n_pad), (ph, n_bands * rows - H + ph), (pw, wp - W - pw)),
+                mode="edge")
+
+    w_specs, w_args = [], []
+    for s in stages:
+        for w in s.weights:
+            w_specs.append(pl.BlockSpec(w.shape, lambda n, i, nd=w.ndim: (0,) * nd))
+            w_args.append(w)
+
+    out = pl.pallas_call(
+        functools.partial(_chain_kernel, spec=spec, rows=rows,
+                          carrier=planes.dtype, interp=vc.run_interpret),
+        grid=((N + n_pad) // P, n_bands),
+        in_specs=[pl.BlockSpec((P, rows + 2 * ph, wp),
+                               lambda n, i: (n * P, i * rows, 0),
+                               indexing_mode=pl.Unblocked())] + w_specs,
+        out_specs=pl.BlockSpec((P, rows, wp), lambda n, i: (n, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N + n_pad, n_bands * rows, wp), planes.dtype),
+        interpret=vc.run_interpret,
+    )(x, *w_args)
+    return out[:N, :H, pw:pw + W]
+
+
+def _spec_of(stages) -> tuple:
+    return tuple((s.op, s.static) for s in stages)
+
+
+def _flat_weights(stages) -> tuple:
+    return tuple(w for s in stages for w in s.weights)
+
+
+def _respec(spec, weights) -> tuple[Stage, ...]:
+    """Rebuild Stage objects from the static spec + flat weight list."""
+    out, wi = [], 0
+    for op, static in spec:
+        nw = _N_WEIGHTS[op]
+        out.append(Stage(op, static, tuple(weights[wi:wi + nw])))
+        wi += nw
+    return tuple(out)
+
+
+def fused_chain(img: Array, stages, *, vc: VectorConfig | None = None) -> Array:
+    """Run a stage chain over an image in ONE Pallas launch.
+
+    img: (H, W), (H, W, C) or (B, H, W, C); u8 / f32 / bf16 carrier.
+    vc: block width; None = chain-aware autotune (largest lmul whose
+        accumulated-halo working set fits VMEM).
+    """
+    stages = tuple(stages)
+    if not stages:
+        return img
+    if vc is None:
+        from repro.core.autotune import pick_chain_lmul
+        vc = pick_chain_lmul(stages, img.shape[-2] if img.ndim > 2 else img.shape[-1],
+                             in_dtype=img.dtype)
+
+    global _LAUNCHES
+    _LAUNCHES += 1
+
+    spec, weights = _spec_of(stages), _flat_weights(stages)
+    if img.ndim == 2:
+        return _chain_planes(img[None], weights, spec, vc)[0]
+    if img.ndim == 3:                      # (H, W, C) -> planes (C, H, W)
+        planes = jnp.moveaxis(img, -1, 0)
+        out = _chain_planes(planes, weights, spec, vc)
+        return jnp.moveaxis(out, 0, -1)
+    if img.ndim == 4:                      # (B, H, W, C) -> planes (B*C, H, W)
+        B, H, W, C = img.shape
+        planes = jnp.moveaxis(img, -1, 1).reshape(B * C, H, W)
+        out = _chain_planes(planes, weights, spec, vc)
+        return jnp.moveaxis(out.reshape(B, C, H, W), 1, -1)
+    raise ValueError(f"fused_chain: unsupported rank {img.ndim}")

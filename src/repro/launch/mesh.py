@@ -7,19 +7,30 @@ XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* importing jax.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 exposes explicit axis types; older versions default to Auto
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - version-dependent
+    AxisType = None
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis_types when the installed jax supports it
+    (jax < 0.5 has no jax.sharding.AxisType and defaults to Auto)."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
     data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"))

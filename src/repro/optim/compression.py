@@ -15,6 +15,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import shard_map
+
 Array = jax.Array
 
 
@@ -73,8 +75,8 @@ def make_compressed_allreduce(mesh, axis_name="data"):
     def one(g, r):
         def body(gl, rl):
             return compressed_psum(gl, rl, axis_name)
-        return jax.shard_map(body, mesh=mesh, in_specs=(P(axis_name), P(axis_name)),
-                             out_specs=(P(axis_name), P(axis_name)), check_vma=False)(g, r)
+        return shard_map(body, mesh=mesh, in_specs=(P(axis_name), P(axis_name)),
+                         out_specs=(P(axis_name), P(axis_name)))(g, r)
 
     def allreduce(tree, residuals):
         out = jax.tree.map(one, tree, residuals)

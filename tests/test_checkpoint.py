@@ -56,14 +56,15 @@ def test_elastic_remesh(tmp_path, run_elastic=None):
     from conftest import run_subprocess
     out = run_subprocess(f"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_mesh
 from repro.train import checkpoint as ck
 t = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
-mesh_a = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh_a = make_mesh((4, 2), ("data", "model"))
 sh_a = {{"w": NamedSharding(mesh_a, P("data", "model"))}}
 t = jax.tree.map(lambda x, s: jax.device_put(x, s), t, sh_a)
 ck.save({str(tmp_path)!r}, 7, t)
-mesh_b = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh_b = make_mesh((2, 4), ("data", "model"))
 sh_b = {{"w": NamedSharding(mesh_b, P("model", "data"))}}
 out, step = ck.restore({str(tmp_path)!r}, jax.tree.map(jnp.zeros_like, t), shardings=sh_b)
 assert step == 7

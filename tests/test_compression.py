@@ -24,15 +24,17 @@ def test_error_feedback_accumulates():
 def test_compressed_psum_matches_mean():
     out = run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh
+from repro.core.compat import shard_map
 from repro.optim.compression import compressed_psum
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 g = jnp.asarray(np.random.default_rng(0).standard_normal((8, 64)), jnp.float32)
 res = jnp.zeros_like(g)
 def body(gl, rl):
     return compressed_psum(gl, rl, "data")
-out, new_res = jax.shard_map(body, mesh=mesh, in_specs=(P("data"), P("data")),
-                             out_specs=(P("data"), P("data")), check_vma=False)(g, res)
+out, new_res = shard_map(body, mesh=mesh, in_specs=(P("data"), P("data")),
+                         out_specs=(P("data"), P("data")))(g, res)
 true_mean = jnp.mean(g, axis=0)
 err = float(jnp.max(jnp.abs(out[0] - true_mean)))
 scale = float(jnp.max(jnp.abs(g)) / 127.0)

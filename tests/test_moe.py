@@ -25,13 +25,13 @@ def test_capacity_drops():
 def test_a2a_equals_scatter_with_grads():
     out = run_subprocess("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.launch.mesh import make_mesh
 from repro.configs import reduced_config
 from repro.models import lm
 from repro.sharding import rules
 from repro.train import step as step_mod
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = reduced_config("deepseek-v3-671b").replace(dtype="float32")
 key = jax.random.key(0)
 B, S = 4, 32

@@ -1,5 +1,7 @@
 """Hypothesis property tests on system invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # not in the base image
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax

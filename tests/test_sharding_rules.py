@@ -8,13 +8,14 @@ from conftest import run_subprocess
 def test_param_specs_and_constraints():
     out = run_subprocess("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh
 from repro.configs import get_config
 from repro.models import lm
 from repro.sharding import rules
 from functools import partial
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 for arch in ("gemma-7b", "deepseek-v3-671b", "starcoder2-7b", "xlstm-125m"):
     cfg = get_config(arch)
     shapes = jax.eval_shape(partial(lm.init_params, cfg=cfg), jax.random.key(0))
@@ -39,9 +40,10 @@ print("SPECS_OK")
 def test_constrain_prunes_indivisible():
     out = run_subprocess("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh
 from repro.sharding import rules
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 x = jnp.ones((3, 7))   # indivisible by any axis
 with mesh:
     y = jax.jit(lambda a: rules.constrain(a, P("data", "model"), mesh))(x)

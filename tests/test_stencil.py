@@ -1,0 +1,202 @@
+"""Fused stencil-pipeline engine: batched/multi-channel parametrized sweeps
+vs the jnp oracles, chain goldens, morph-fold pinning, and the one-launch
+guarantee."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autotune import chain_working_set, pick_chain_lmul, plane_block
+from repro.core.vector import VectorConfig
+from repro.kernels import ops, ref, stencil
+
+SHAPES = [(37, 61), (37, 61, 3), (2, 33, 49, 3)]
+DTYPES = [jnp.uint8, jnp.float32]
+LMULS = [1, 4]
+
+
+def _image(rng, shape, dtype):
+    if dtype == jnp.uint8:
+        return jnp.asarray(rng.integers(0, 256, shape, dtype=np.uint8))
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * 100)
+
+
+def _per_plane(fn, img):
+    """Apply a (H, W)/(H, W, C) oracle over an optional batch axis."""
+    if img.ndim == 4:
+        return jnp.stack([fn(img[b]) for b in range(img.shape[0])])
+    return fn(img)
+
+
+# ---------------------------------------------------------------------------
+# public per-op APIs on (H, W), (H, W, C), (B, H, W, C) x dtype x lmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lmul", LMULS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_filter2d_batched(rng, shape, dtype, lmul):
+    img = _image(rng, shape, dtype)
+    kern = jnp.asarray(rng.standard_normal((3, 3)) * 0.1, jnp.float32)
+    out = ops.filter2d(img, kern, vc=VectorConfig(lmul=lmul))
+    want = _per_plane(lambda im: ref.filter2d_ref(im, kern), img)
+    assert out.shape == img.shape and out.dtype == img.dtype
+    if dtype == jnp.uint8:
+        assert int(jnp.max(jnp.abs(out.astype(int) - want.astype(int)))) <= 1
+    else:
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("lmul", LMULS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_erode_batched(rng, shape, dtype, lmul):
+    img = _image(rng, shape, dtype)
+    out = ops.erode(img, 2, vc=VectorConfig(lmul=lmul))
+    want = _per_plane(lambda im: ref.erode_ref(im, 2), img)
+    assert out.shape == img.shape
+    assert (out == want).all()
+
+
+@pytest.mark.parametrize("lmul", LMULS)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_sep_filter_batched(rng, shape, lmul):
+    img = _image(rng, shape, jnp.uint8)
+    k1 = ref.gaussian_kernel1d(5)
+    out = ops.sep_filter2d(img, k1, k1, vc=VectorConfig(lmul=lmul))
+    want = _per_plane(lambda im: ref.sep_filter2d_ref(im, k1, k1), img)
+    assert int(jnp.max(jnp.abs(out.astype(int) - want.astype(int)))) <= 1
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_dilate_threshold_batched(rng, dtype):
+    img = _image(rng, (2, 40, 56, 3), dtype)
+    out = ops.dilate(img, 1, vc=VectorConfig(lmul=4))
+    want = _per_plane(lambda im: ref.dilate_ref(im, 1), img)
+    assert (out == want).all()
+    th = ops.threshold(img, 90.0, vc=VectorConfig(lmul=4))
+    want = jnp.where(img > jnp.asarray(90.0).astype(img.dtype),
+                     jnp.asarray(255.0).astype(img.dtype),
+                     jnp.asarray(0).astype(img.dtype))
+    assert (th == want).all()
+
+
+# ---------------------------------------------------------------------------
+# chain goldens vs ref.chain_ref (compute-on-extended-domain semantics)
+# ---------------------------------------------------------------------------
+
+def _chain3():
+    return (stencil.gaussian_stage(5), stencil.erode_stage(1),
+            stencil.threshold_stage(100.0))
+
+
+@pytest.mark.parametrize("lmul", LMULS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_chain_golden(rng, shape, dtype, lmul):
+    img = _image(rng, shape, dtype)
+    out = stencil.fused_chain(img, _chain3(), vc=VectorConfig(lmul=lmul))
+    want = ref.chain_ref(img, _chain3())
+    assert out.shape == img.shape and out.dtype == img.dtype
+    if dtype == jnp.uint8:
+        assert (out == want).all()
+    else:
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-4)
+
+
+def test_chain_golden_all_ops(rng):
+    """Every stage op in one chain, pinned against the oracle."""
+    chain = (stencil.filter_stage(jnp.asarray(rng.standard_normal((3, 3)) * 0.1,
+                                              jnp.float32)),
+             stencil.grad_stage(),
+             stencil.affine_stage(0.5, 10.0),
+             stencil.dilate_stage(2),
+             stencil.threshold_stage(40.0))
+    img = _image(rng, (2, 37, 49, 2), jnp.uint8)
+    out = stencil.fused_chain(img, chain, vc=VectorConfig(lmul=1))
+    want = ref.chain_ref(img, chain)
+    assert (out == want).all()
+
+
+def test_chain_lmul_invariance(rng):
+    """The paper's correctness property, extended to fused chains: block
+    width (and plane block) must not change results."""
+    img = _image(rng, (3, 50, 70, 3), jnp.uint8)
+    outs = [stencil.fused_chain(img, _chain3(), vc=VectorConfig(lmul=l))
+            for l in (1, 2, 4, 8)]
+    outs.append(stencil.fused_chain(img, _chain3(), vc=None))  # autotuned
+    for o in outs[1:]:
+        assert (o == outs[0]).all()
+
+
+# ---------------------------------------------------------------------------
+# morph column-reduction fold (erode.py dedup satellite) golden
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", ["erode", "dilate"])
+@pytest.mark.parametrize("r", [1, 2, 3])
+def test_morph_fold_golden(rng, op, r):
+    """The folded lane-shift loop (TPU lowering) and the reduce_window
+    lowering (interpret) both match the oracle exactly."""
+    img = _image(rng, (45, 83), jnp.uint8)
+    fn = ops.erode if op == "erode" else ops.dilate
+    want = (ref.erode_ref if op == "erode" else ref.dilate_ref)(img, r)
+    assert (fn(img, r, vc=VectorConfig(lmul=2)) == want).all()
+    # the uintr (TPU) lowering, exercised directly on a band with halo
+    band = jnp.pad(img, r, mode="edge")
+    got = stencil._apply_morph(band, (), (r,), jnp.uint8, op=op, interp=False)
+    # full-width output: crop the column halo, rows already consumed
+    assert (got[:, r:r + img.shape[1]] == want).all()
+
+
+# ---------------------------------------------------------------------------
+# one-launch guarantee + chain-aware autotune
+# ---------------------------------------------------------------------------
+
+def test_chain_is_one_pallas_call(rng):
+    batch = _image(rng, (2, 64, 96, 3), jnp.uint8)
+    vc = VectorConfig(lmul=4)
+    n = stencil.count_pallas_calls(
+        lambda x: stencil.fused_chain(x, _chain3(), vc=vc), batch)
+    assert n == 1
+    # the launch counter agrees: one fused_chain call = one launch
+    stencil.reset_launch_counter()
+    stencil.fused_chain(batch, _chain3(), vc=vc)
+    assert stencil.launch_count() == 1
+
+
+def test_chain_working_set_monotone():
+    """Longer chains and wider images never pick a larger lmul."""
+    one = (stencil.gaussian_stage(5),)
+    three = _chain3()
+    prev = 99
+    for w in (1920, 3840, 7680, 15360):
+        l = pick_chain_lmul(three, w).lmul
+        assert l <= prev
+        assert l <= pick_chain_lmul(one, w).lmul
+        prev = l
+
+
+def test_chain_working_set_fits_budget():
+    for w in (1920, 3840, 7680):
+        ws = chain_working_set(_chain3(), w)
+        vc = pick_chain_lmul(_chain3(), w)
+        assert ws.bytes(vc) <= vc.vmem_budget
+
+
+def test_plane_block_budget():
+    vc = VectorConfig(lmul=4)
+    p = plane_block(_chain3(), 512, 24, vc)
+    assert p >= 1 and 24 % p == 0 or p <= 24
+    ws = chain_working_set(_chain3(), 512)
+    assert p * ws.bytes(vc) <= vc.vmem_budget
+    # a plane block never exceeds the plane count
+    assert plane_block(_chain3(), 512, 1, vc) == 1
+
+
+def test_preprocess_bow_single_launch(rng):
+    from repro.cv import imgproc
+    imgs = _image(rng, (4, 32, 32, 3), jnp.float32)
+    stencil.reset_launch_counter()
+    out = imgproc.preprocess_bow(imgs)
+    assert out.shape == imgs.shape
+    assert stencil.launch_count() == 1
