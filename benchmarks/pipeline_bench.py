@@ -104,7 +104,59 @@ def run(*, quick: bool = False):
     return [row]
 
 
+# ---------------------------------------------------------------------------
+# Octave benchmark: the SIFT Gaussian ladder + next-octave pyrDown as ONE
+# fused launch (tap stages + terminal strided tap) vs the per-scale staged
+# path (one gaussian_blur launch per scale + one pyrDown, the old
+# detect_keypoints structure).
+# ---------------------------------------------------------------------------
+
+N_SCALES = 4
+
+
+def staged_octave(g):
+    """Per-scale from-base blurs + pyrDown: n_scales+3+1 launches."""
+    sigmas = [1.6 * 2 ** (i / N_SCALES) for i in range(N_SCALES + 3)]
+    pyr = []
+    for s in sigmas:
+        k = int(min(2 * round(3 * s) + 1, 15))
+        pyr.append(ops.gaussian_blur(g, k, s, vc=VectorConfig(lmul=4)))
+    base = ops.pyr_down(pyr[N_SCALES], vc=VectorConfig(lmul=4))
+    return jnp.stack(pyr), base
+
+
+def run_octave(*, quick: bool = False):
+    from repro.cv import features
+
+    H, W = (256, 256) if quick else (512, 512)
+    stream = ImageStream()
+    g = stream.image((H, W), channels=1, seed=0).astype(jnp.float32)
+
+    fused = lambda x: features.gaussian_octave(x, n_scales=N_SCALES)
+    n_calls = stencil.count_pallas_calls(fused, g)
+    assert n_calls == 1, f"fused octave lowered to {n_calls} pallas_calls, want 1"
+
+    t_fused = time_stats(fused, g, n=3)
+    t_staged = time_stats(staged_octave, g, n=3)
+    speedup = t_staged["best_s"] / t_fused["best_s"]
+    row = {
+        "image": f"{H}x{W}", "dtype": "f32", "n_scales": N_SCALES,
+        "bands": N_SCALES + 3,
+        "pallas_calls_fused": n_calls,
+        "pallas_calls_staged": N_SCALES + 3 + 1,
+        "fused_best_s": round(t_fused["best_s"], 4),
+        "staged_best_s": round(t_staged["best_s"], 4),
+        "fused_speedup": round(speedup, 2),
+    }
+    print_table("Fused SIFT octave (blur ladder + pyrDown) vs per-scale staged",
+                list(row.keys()), [list(row.values())])
+    save_json("octave", [row])
+    record_result("octave", row)
+    return [row]
+
+
 if __name__ == "__main__":        # PYTHONPATH=src python -m benchmarks.pipeline_bench
     import sys
     run(quick="--quick" in sys.argv)
+    run_octave(quick="--quick" in sys.argv)
     flush_results()

@@ -33,6 +33,7 @@ def main():
         erode_bench.run(quick=args.quick)
     if args.only in (None, "pipeline"):
         pipeline_bench.run(quick=args.quick)
+        pipeline_bench.run_octave(quick=args.quick)
     if args.only in (None, "bow"):
         bow_svm_bench.run(quick=args.quick)
     written = flush_results()

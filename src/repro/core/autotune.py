@@ -46,7 +46,8 @@ def _round_lane(vc: VectorConfig, width: int, halo: int) -> int:
 
 # ops whose intermediates widen to f32 in VMEM — the single source of truth;
 # kernels/stencil.py imports this (core stays import-free of kernels)
-WIDENING_OPS = frozenset({"filter2d", "sep_filter", "grad_mag", "affine"})
+WIDENING_OPS = frozenset({"filter2d", "sep_filter", "grad_mag", "affine",
+                          "box", "pyr_down", "resize2", "sobel"})
 
 
 @dataclass(frozen=True)
@@ -56,33 +57,118 @@ class _StageShape:
     halo: tuple
 
 
+def resolve_chain(stages):
+    """Static chain walk shared with kernels/stencil.py semantics.
+
+    Returns per-stage records ``(op, mode, halo, stride, bands_in,
+    bands_out, tap)`` where mode is one of map/tap/emit/reduce and ``tap``
+    is the normalized (non-negative) source band index for tap stages,
+    else None.  Stages are duck-typed: ``.op`` and ``.halo`` are required;
+    ``.stride`` defaults to (1, 1) and ``.tap`` (source band index,
+    appended output) to None.  The band arity rules are the IR contract:
+    ``sobel`` replaces the last band with a dx/dy pair, ``grad_mag``
+    consumes the last two bands when at least two are live (pairwise
+    magnitude, halo 0) and otherwise stays the single-band
+    central-difference stage, tapped stages append their result.
+    """
+    n = 1
+    out = []
+    for s in stages:
+        op = s.op
+        tap = getattr(s, "tap", None)
+        stride = tuple(getattr(s, "stride", (1, 1)))
+        halo = tuple(s.halo)
+        if op == "sobel":
+            if tap is not None:
+                raise ValueError("sobel stage does not support tap=")
+            mode, n2 = "emit", n + 1
+        elif op == "grad_mag" and n >= 2:
+            mode, halo, n2 = "reduce", (0, 0), n - 1
+        elif tap is not None:
+            if not -n <= tap < n:
+                raise ValueError(f"stage {op!r}: tap={tap} out of range for "
+                                 f"{n} live band(s)")
+            tap = tap % n
+            mode, n2 = "tap", n + 1
+        else:
+            mode, n2 = "map", n
+        out.append((op, mode, halo, stride, n, n2, tap))
+        n = n2
+    for i, (op, mode, halo, stride, _, _, _) in enumerate(out):
+        if stride != (1, 1) and mode != "map" and i != len(out) - 1:
+            raise ValueError(f"strided {mode} stage {op!r} must be the final "
+                             "stage of the chain (geometry-changing taps are "
+                             "terminal)")
+    return out
+
+
+def chain_accumulated_halo(stages) -> tuple[int, int]:
+    """(row, col) halo of the whole chain in *input-resolution* units: each
+    stage's halo scaled by the product of the map strides before it."""
+    ph = pw = 0
+    sy = sx = 1
+    for op, mode, halo, stride, _, _, _ in resolve_chain(stages):
+        ph += halo[0] * sy
+        pw += halo[1] * sx
+        if mode == "map":
+            sy *= stride[0]
+            sx *= stride[1]
+    return ph, pw
+
+
 def chain_working_set(stages, width: int, in_dtype=jnp.uint8) -> WorkingSet:
     """Working set of a fused stage chain — mirrors kernels/stencil.py.
 
-    Per grid step: one overlapping input window of rows + 2*PH rows (PH =
-    accumulated row halo of the whole chain), then per stage its in-band
-    and out-band (f32 for widening ops, carrier dtype otherwise) since the
-    intermediates stay resident in VMEM, plus the final packed output band.
-    `stages` is duck-typed: anything with `.op` and `.halo` works.
+    Per grid step: one overlapping input window whose rows follow the
+    backward recurrence ``R_in = R_out * stride + 2*halo`` (so strided
+    stages account for their pre-decimation geometry), then per stage its
+    in-bands and out-bands (f32 for widening ops, carrier dtype otherwise)
+    times the number of live bands — a tap ladder keeps every emitted band
+    VMEM-resident, so working set grows with band count — plus the packed
+    output bands.  `stages` is duck-typed (``.op``/``.halo``; optional
+    ``.stride``/``.tap``).
     """
-    halos = [tuple(s.halo) for s in stages]
-    ph = sum(h for h, _ in halos)
-    pw = sum(w for _, w in halos)
+    plan = resolve_chain(stages)
+    ph_in, pw_in = chain_accumulated_halo(stages)
     itemsize = jnp.dtype(in_dtype).itemsize
 
     def fn(vc: VectorConfig) -> int:
         rows = vc.rows(in_dtype)
-        wp = _round_lane(vc, width, pw)
-        total = (rows + 2 * ph) * wp * itemsize          # input window DMA
-        rem = ph
-        for s, (sh, _) in zip(stages, halos):
-            in_rows = rows + 2 * rem
-            rem -= sh
-            out_rows = rows + 2 * rem
-            size = 4 if s.op in WIDENING_OPS else itemsize
-            total += (in_rows + out_rows) * wp * size    # stage temporaries
-            total += out_rows * wp * itemsize            # packed stage output
-        total += rows * wp * itemsize                    # store band
+        # backward recurrence: window rows at the chain input
+        r = rows
+        for op, mode, halo, stride, _, _, _ in reversed(plan):
+            sy = stride[0] if mode == "map" else 1
+            r = r * sy + 2 * halo[0]
+        wp = _round_lane(vc, width, pw_in)
+        total = r * wp * itemsize                        # input window DMA
+        scale = 1
+        sizes = [itemsize]                 # live-band element sizes (bytes):
+        for op, mode, halo, stride, n_in, n_out, tap in plan:
+            sy = stride[0] if mode == "map" else 1      # sobel emits f32
+            out_r = (r - 2 * halo[0]) // sy             # bands that stay
+            wp_s = max(vc.lane, wp // scale)            # f32 downstream
+            widen = op in WIDENING_OPS
+            n_part = n_in if mode == "map" else 1        # participating bands
+            # in-side: every live band is resident; each participating band
+            # of a widening op additionally holds a full f32 expansion
+            total += sum(r * wp_s * sz for sz in sizes)
+            if widen:
+                total += n_part * r * wp_s * 4
+            if mode == "emit":
+                sizes = sizes[:-1] + [4, 4]
+            elif mode == "reduce":
+                sizes = sizes[:-2] + [itemsize]
+            elif mode == "tap":
+                sizes = sizes + [sizes[tap]]
+            # out-side: f32 accumulators of widening participants + every
+            # band packed at its own dtype, resident until the store
+            if widen:
+                total += n_part * out_r * wp_s * 4
+            total += sum(out_r * wp_s * sz for sz in sizes)
+            r = out_r
+            if mode == "map":
+                scale *= sy
+        total += rows * wp * itemsize                    # store band(s)
         return total
     return WorkingSet(fn)
 

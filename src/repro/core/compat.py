@@ -7,10 +7,21 @@ releases too (the container pins jax 0.4.x):
     and the replication-check kwarg was renamed check_rep -> check_vma.
   * ``jax.sharding.AxisType`` — absent before 0.5 (handled in
     repro.launch.mesh.make_mesh).
+  * ``ClosedJaxpr`` / ``Jaxpr`` — the public home moved from ``jax.core``
+    (deprecated, removal scheduled) to ``jax.extend.core``; jaxpr walkers
+    (e.g. kernels.stencil.count_pallas_calls) must import from here.
 """
 from __future__ import annotations
 
 import jax
+
+try:
+    from jax.extend import core as _jex_core
+    ClosedJaxpr = _jex_core.ClosedJaxpr
+    Jaxpr = _jex_core.Jaxpr
+except (ImportError, AttributeError):  # pragma: no cover - version-dependent
+    ClosedJaxpr = jax.core.ClosedJaxpr
+    Jaxpr = jax.core.Jaxpr
 
 try:
     _shard_map = jax.shard_map

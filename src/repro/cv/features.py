@@ -17,9 +17,54 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core.vector import VectorConfig
+from repro.kernels import stencil
+
 from . import imgproc
 
 Array = jax.Array
+
+
+def gaussian_octave(img: Array, *, n_scales: int = 4, sigma0: float = 1.6,
+                    max_ksize: int = 15, with_next_base: bool = True,
+                    vc: VectorConfig | None = None
+                    ) -> tuple[Array, Array | None]:
+    """One SIFT octave — blur ladder (+ next-octave base) as ONE Pallas launch.
+
+    img: (H, W) single plane (any carrier dtype; SIFT passes f32).
+    Returns (pyr, next_base):
+      pyr       (n_scales+3, H, W) — scale i blurred to sigma0 * 2^(i/n_scales),
+                built *incrementally* (Lowe's ladder: each scale taps the
+                previous band with sigma_delta = sqrt(s_i^2 - s_{i-1}^2)),
+                so every DoG input is a band of the same fused chain;
+      next_base (ceil(H/2), ceil(W/2)) — pyrDown of scale `n_scales` (the
+                2x-sigma image), the base of the next octave; None when
+                with_next_base=False (single-octave callers skip the
+                downsample's kernel work and its +2 accumulated halo).
+
+    The whole octave lowers to a single `pallas_call`: the first stage maps
+    the input to pyr[0], each later scale is a `tap=-1` Gaussian stage
+    appending its band, and the downsample is a terminal strided
+    `pyr_down_stage(tap=n_scales)` — every intermediate scale stays
+    VMEM-resident instead of costing one gaussian_blur launch + HBM round
+    trip per scale (the old per-scale loop: n_scales+3 launches)."""
+    sigmas = [sigma0 * 2 ** (i / n_scales) for i in range(n_scales + 3)]
+
+    def ksz(s: float) -> int:
+        return max(3, int(min(2 * round(3 * s) + 1, max_ksize)))
+
+    stages = [stencil.gaussian_stage(ksz(sigmas[0]), sigmas[0])]
+    prev = sigmas[0]
+    for s in sigmas[1:]:
+        delta = math.sqrt(max(s * s - prev * prev, 1e-12))
+        stages.append(stencil.gaussian_stage(ksz(delta), delta, tap=-1))
+        prev = s
+    if with_next_base:
+        stages.append(stencil.pyr_down_stage(tap=n_scales))
+    outs = stencil.fused_chain(img, tuple(stages), vc=vc)
+    if with_next_base:
+        return jnp.stack(outs[:-1]), outs[-1]
+    return jnp.stack(outs), None
 
 
 def gradients(img: Array) -> tuple[Array, Array]:
@@ -46,12 +91,11 @@ def detect_keypoints(img: Array, *, n_scales: int = 4, max_kp: int = 64,
     g = g / jnp.maximum(jnp.max(g), 1e-6)
     H, W = g.shape
 
-    sigmas = [1.6 * (2 ** (i / n_scales)) for i in range(n_scales + 3)]
-    pyr = []
-    for s in sigmas:
-        k = int(2 * round(3 * s) + 1)
-        pyr.append(imgproc.gaussian_blur(g, min(k, 15), s, vc=imgproc.DEFAULT).astype(jnp.float32))
-    dogs = jnp.stack([pyr[i + 1] - pyr[i] for i in range(len(pyr) - 1)])  # (S+2, H, W)
+    # Gaussian ladder: ONE fused launch for the whole octave (incremental
+    # sigma taps), not one blur launch per scale; this detector is
+    # single-octave, so skip the next-octave pyrDown tap
+    pyr, _ = gaussian_octave(g, n_scales=n_scales, with_next_base=False)
+    dogs = pyr[1:] - pyr[:-1]                                   # (S+2, H, W)
 
     mid = dogs[1:-1]                                            # (S, H, W)
     # 3x3x3 neighborhood extrema

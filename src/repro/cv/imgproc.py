@@ -25,6 +25,9 @@ gaussian_filter2d = kops.gaussian_filter2d
 erode = kops.erode
 dilate = kops.dilate
 threshold = kops.threshold
+pyr_down = kops.pyr_down
+box_blur = kops.box_blur
+sobel = kops.sobel
 gaussian_kernel1d = kref.gaussian_kernel1d
 fused_chain = stencil.fused_chain
 
@@ -49,13 +52,16 @@ def rgb_to_gray(img: Array) -> Array:
     return g.astype(img.dtype)
 
 
-def resize_half(img: Array) -> Array:
-    """2x downsample by 2x2 mean (used by the SIFT octave pyramid)."""
-    H, W = img.shape[:2]
-    H2, W2 = H // 2, W // 2
-    x = img[: H2 * 2, : W2 * 2].astype(jnp.float32)
-    x = x.reshape(H2, 2, W2, 2, *x.shape[2:]).mean(axis=(1, 3))
-    return x.astype(jnp.float32)
+def resize_half(img: Array, *, vc: VectorConfig | None = None) -> Array:
+    """2x downsample by 2x2 mean as ONE fused Pallas launch
+    (out = floor(size/2)).
+
+    Preserves the input dtype: integer carriers are rounded + saturated
+    (OpenCV saturate_cast), they are NOT silently promoted to float32 —
+    this is the pyramid downsample, so a u8 pyramid stays u8 end to end.
+    Callers that want to accumulate in float (the SIFT path) must widen
+    explicitly before downsampling."""
+    return stencil.fused_chain(img, (stencil.resize2_stage(),), vc=vc)
 
 
 # ---------------------------------------------------------------------------

@@ -18,15 +18,33 @@ from .bow import bow_assign  # noqa: F401
 from .erode import dilate, erode  # noqa: F401
 from .filter2d import filter2d, sep_filter2d  # noqa: F401
 from .stencil import (fused_chain, Stage,  # noqa: F401
-                      affine_stage, dilate_stage, erode_stage, filter_stage,
-                      gaussian_stage, grad_stage, sep_filter_stage,
-                      threshold_stage)
+                      affine_stage, box_stage, dilate_stage, erode_stage,
+                      filter_stage, gaussian_stage, grad_stage,
+                      pyr_down_stage, resize2_stage, sep_filter_stage,
+                      sobel_stage, threshold_stage)
 
 
 def threshold(img, thresh: float, maxval: float = 255.0, *,
               vc: VectorConfig = DEFAULT):
-    """OpenCV THRESH_BINARY: maxval where img > thresh else 0."""
+    """OpenCV THRESH_BINARY: maxval where img > thresh else 0 (f32 compare,
+    so fractional thresholds bind on integer carriers)."""
     return fused_chain(img, (threshold_stage(thresh, maxval),), vc=vc)
+
+
+def pyr_down(img, *, vc: VectorConfig = DEFAULT):
+    """OpenCV pyrDown: 5x5 [1,4,6,4,1]/16 Gaussian + 2x decimation on even
+    image coordinates; out = ceil(size/2), dtype preserved."""
+    return fused_chain(img, (pyr_down_stage(),), vc=vc)
+
+
+def box_blur(img, r: int, *, vc: VectorConfig = DEFAULT):
+    """OpenCV blur(): normalized (2r+1)^2 box filter."""
+    return fused_chain(img, (box_stage(r),), vc=vc)
+
+
+def sobel(img, *, vc: VectorConfig = DEFAULT):
+    """OpenCV Sobel ksize=3 pair: (dx, dy) widened f32, one fused launch."""
+    return fused_chain(img, (sobel_stage(),), vc=vc)
 
 
 def gaussian_blur(img, ksize: int, sigma: float | None = None, *,

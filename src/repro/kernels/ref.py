@@ -91,71 +91,210 @@ def _saturate(out: Array, dtype) -> Array:
     return out.astype(dtype)
 
 
-def chain_ref(img: Array, stages) -> Array:
+def _ref_valid_op(s, x, dtype):
+    """One geometry-preserving-or-shrinking stage in valid mode on a 2D
+    extended-domain array, saturating to the band dtype.  Strided ops return
+    their *pre-decimation* valid result (the caller decimates phase-aligned
+    to image coordinates)."""
+    op = s.op
+    ph, pw = s.halo
+    h, w = x.shape[0] - 2 * ph, x.shape[1] - 2 * pw
+    if op == "filter2d":
+        k = s.weights[0].astype(jnp.float32)
+        kh, kw = k.shape
+        xf = x.astype(jnp.float32)
+        acc = sum(k[i, j] * xf[i:i + h, j:j + w]
+                  for i in range(kh) for j in range(kw))
+        return _saturate(acc, dtype)
+    if op in ("sep_filter", "pyr_down"):
+        if op == "pyr_down":
+            kx = ky = jnp.asarray([1.0, 4.0, 6.0, 4.0, 1.0], jnp.float32) / 16.0
+        else:
+            kx = s.weights[0].astype(jnp.float32)
+            ky = s.weights[1].astype(jnp.float32)
+        xf = x.astype(jnp.float32)
+        row = sum(kx[j] * xf[:, j:j + w] for j in range(kx.shape[0]))
+        acc = sum(ky[i] * row[i:i + h] for i in range(ky.shape[0]))
+        return _saturate(acc, dtype)
+    if op == "box":
+        (r,) = s.static
+        k = 2 * r + 1
+        xf = x.astype(jnp.float32)
+        row = sum(xf[:, j:j + w] for j in range(k))
+        acc = sum(row[i:i + h] for i in range(k))
+        return _saturate(acc * jnp.float32(1.0 / (k * k)), dtype)
+    if op in ("erode", "dilate"):
+        red = jnp.minimum if op == "erode" else jnp.maximum
+        acc = x[0:h, 0:w]
+        for i in range(2 * ph + 1):
+            for j in range(2 * pw + 1):
+                acc = red(acc, x[i:i + h, j:j + w])
+        return acc
+    if op == "threshold":
+        # f32 comparison: fractional thresholds must not truncate on
+        # integer carriers (127.5 on u8 means x >= 128, not x > 127)
+        t, maxval = s.static
+        return jnp.where(x.astype(jnp.float32) > jnp.float32(t),
+                         jnp.asarray(maxval).astype(dtype),
+                         jnp.asarray(0).astype(dtype))
+    if op == "affine":
+        scale, offset = s.static
+        return _saturate(x.astype(jnp.float32) * scale + offset, dtype)
+    if op == "grad_mag":          # single-band central-difference form
+        xf = x.astype(jnp.float32)
+        dy = (xf[2:2 + h, 1:1 + w] - xf[0:h, 1:1 + w]) * 0.5
+        dx = (xf[1:1 + h, 2:2 + w] - xf[1:1 + h, 0:w]) * 0.5
+        return _saturate(jnp.sqrt(dx * dx + dy * dy), dtype)
+    raise ValueError(f"chain_ref: unknown op {op!r}")
+
+
+def _ref_sobel(x):
+    """Valid-mode Sobel ksize=3 pair: dx = [1,2,1]^T (x) [-1,0,1], dy = dx^T,
+    widened f32 (signed; never packed to the carrier)."""
+    xf = x.astype(jnp.float32)
+    h = x.shape[0] - 2
+    cd = xf[:, 2:] - xf[:, :-2]
+    cs = (xf[:, :-2] + xf[:, 2:]) + 2.0 * xf[:, 1:-1]
+    dx = cd[0:h] + 2.0 * cd[1:1 + h] + cd[2:2 + h]
+    dy = cs[2:2 + h] - cs[0:h]
+    return dx, dy
+
+
+def chain_ref(img: Array, stages):
     """Oracle for kernels.stencil.fused_chain (duck-typed Stage objects).
 
     Semantics: compute-on-extended-domain — the input is edge-padded once by
-    the chain's accumulated halo and every stage runs valid-mode on the
-    extended array, with the per-stage carrier-dtype saturation the fused
-    kernel applies. For a single stage this coincides with the per-op refs
-    above; multi-stage chains differ from staged per-op execution only
-    inside the accumulated-halo border ring (see EXPERIMENTS.md §Perf).
+    the chain's accumulated (stride-scaled) halo and every stage runs
+    valid-mode on the extended array, with the per-stage band-dtype
+    saturation the fused kernel applies.  The value flowing between stages
+    is an ordered list of bands, each tracked with the image coordinate of
+    its local origin so strided stages decimate on *image-even* rows/cols
+    (OpenCV pyrDown alignment) regardless of how much halo is left.  For a
+    single stage this coincides with the per-op refs above; multi-stage
+    chains differ from staged per-op execution only inside the
+    accumulated-halo border ring (see EXPERIMENTS.md §Perf).
+
+    Returns one array, or a tuple when the chain ends with multiple live
+    bands (taps / Sobel pairs), mirroring fused_chain.
     """
-    def plane_chain(x):                            # x: (h, w) carrier dtype
-        for s in stages:
-            ph, pw = s.halo
-            h, w = x.shape[0] - 2 * ph, x.shape[1] - 2 * pw
-            if s.op == "filter2d":
-                k = s.weights[0].astype(jnp.float32)
-                kh, kw = k.shape
-                xf = x.astype(jnp.float32)
-                acc = sum(k[i, j] * xf[i:i + h, j:j + w]
-                          for i in range(kh) for j in range(kw))
-                x = _saturate(acc, img.dtype)
-            elif s.op == "sep_filter":
-                kx = s.weights[0].astype(jnp.float32)
-                ky = s.weights[1].astype(jnp.float32)
-                xf = x.astype(jnp.float32)
-                row = sum(kx[j] * xf[:, j:j + w] for j in range(kx.shape[0]))
-                acc = sum(ky[i] * row[i:i + h] for i in range(ky.shape[0]))
-                x = _saturate(acc, img.dtype)
-            elif s.op in ("erode", "dilate"):
-                red = jnp.minimum if s.op == "erode" else jnp.maximum
-                acc = x[0:h, 0:w]
-                for i in range(2 * ph + 1):
-                    for j in range(2 * pw + 1):
-                        acc = red(acc, x[i:i + h, j:j + w])
-                x = acc
-            elif s.op == "threshold":
-                t, maxval = s.static
-                t = jnp.asarray(t).astype(x.dtype)
-                x = jnp.where(x > t, jnp.asarray(maxval).astype(img.dtype),
-                              jnp.asarray(0).astype(img.dtype))
-            elif s.op == "affine":
-                scale, offset = s.static
-                x = _saturate(x.astype(jnp.float32) * scale + offset, img.dtype)
-            elif s.op == "grad_mag":
-                xf = x.astype(jnp.float32)
-                dy = (xf[2:2 + h, 1:1 + w] - xf[0:h, 1:1 + w]) * 0.5
-                dx = (xf[1:1 + h, 2:2 + w] - xf[1:1 + h, 0:w]) * 0.5
-                x = _saturate(jnp.sqrt(dx * dx + dy * dy), img.dtype)
-            else:
-                raise ValueError(f"chain_ref: unknown op {s.op!r}")
-        return x
+    stages = tuple(stages)
 
-    PH = sum(s.halo[0] for s in stages)
-    PW = sum(s.halo[1] for s in stages)
+    # static arity walk (mirrors the stencil IR contract, derived only from
+    # duck-typed stage attributes so this stays an independent oracle)
+    resolved, n = [], 1
+    for s in stages:
+        tap = getattr(s, "tap", None)
+        stride = tuple(getattr(s, "stride", (1, 1)))
+        if s.op == "sobel":
+            resolved.append(("emit", (1, 1), stride, None)); n += 1
+        elif s.op == "grad_mag" and n >= 2:
+            resolved.append(("reduce", (0, 0), stride, None)); n -= 1
+        elif tap is not None:
+            if not -n <= tap < n:
+                raise ValueError(f"chain_ref: stage {s.op!r} tap={tap} out of "
+                                 f"range for {n} live band(s)")
+            resolved.append(("tap", tuple(s.halo), stride, tap % n)); n += 1
+        else:
+            resolved.append(("map", tuple(s.halo), stride, None))
 
-    def one_image(im):                              # (H, W) or (H, W, C)
+    PH = PW = 0
+    sy = sx = 1
+    for mode, (ph, pw), stride, _ in resolved:
+        PH += ph * sy
+        PW += pw * sx
+        if mode == "map":
+            sy, sx = sy * stride[0], sx * stride[1]
+
+    # final image geometry per band: full-res state size + strided-tap rule
+    def rule(op, h, w):
+        if op == "pyr_down":
+            return (h + 1) // 2, (w + 1) // 2
+        if op == "resize2":
+            return h // 2, w // 2
+        return h, w
+
+    if img.ndim == 2:
+        h_fin, w_fin = img.shape
+    elif img.ndim == 3:
+        h_fin, w_fin = img.shape[0], img.shape[1]
+    else:
+        h_fin, w_fin = img.shape[1], img.shape[2]
+    for s, (mode, halo, stride, tap) in zip(stages, resolved):
+        if mode == "map":
+            h_fin, w_fin = rule(s.op, h_fin, w_fin)
+    sizes = [(h_fin, w_fin)]
+    for s, (mode, halo, stride, tap) in zip(stages, resolved):
+        if mode == "emit":
+            sizes = sizes[:-1] + [(h_fin, w_fin)] * 2
+        elif mode == "reduce":
+            sizes = sizes[:-2] + [(h_fin, w_fin)]
+        elif mode == "tap":
+            sizes = sizes + [rule(s.op, h_fin, w_fin)]
+
+    def apply_one(s, ph, pw, stride, b, oy, ox):
+        """Stage s on one band: valid op + image-phase-aligned decimation.
+        Returns (array, new origin)."""
+        if s.op == "resize2":
+            # 2x2-mean: pairs start on even image coordinates
+            xf = b.astype(jnp.float32)
+            s0, s1 = (-oy) % 2, (-ox) % 2
+            m = (xf.shape[0] - s0) // 2
+            mw = (xf.shape[1] - s1) // 2
+            rs = xf[s0:s0 + 2 * m:2] + xf[s0 + 1:s0 + 1 + 2 * m:2]
+            cs = rs[:, s1:s1 + 2 * mw:2] + rs[:, s1 + 1:s1 + 1 + 2 * mw:2]
+            return (_saturate(cs * jnp.float32(0.25), b.dtype),
+                    (oy + s0) // 2, (ox + s1) // 2)
+        new = _ref_valid_op(s, b, b.dtype)
+        noy, nox = oy + ph, ox + pw
+        if stride != (1, 1):
+            s0, s1 = (-noy) % stride[0], (-nox) % stride[1]
+            new = new[s0::stride[0], s1::stride[1]]
+            noy, nox = (noy + s0) // stride[0], (nox + s1) // stride[1]
+        return new, noy, nox
+
+    def crop(b, oy, ox, ph, pw):
+        """Pass-through band: crop by the active stage's halo to stay aligned."""
+        return (b[ph:b.shape[0] - ph or None, pw:b.shape[1] - pw or None],
+                oy + ph, ox + pw)
+
+    def plane_chain(x):                 # x: extended (H+2PH, W+2PW) plane
+        bands = [(x, -PH, -PW)]
+        for s, (mode, (ph, pw), stride, tap) in zip(stages, resolved):
+            if mode == "emit":
+                dx, dy = _ref_sobel(bands[-1][0])
+                oy, ox = bands[-1][1] + 1, bands[-1][2] + 1
+                bands = [crop(*b, ph, pw) for b in bands[:-1]]
+                bands += [(dx, oy, ox), (dy, oy, ox)]
+            elif mode == "reduce":
+                (a, oy, ox), (b, _, _) = bands[-2], bands[-1]
+                af, bf = a.astype(jnp.float32), b.astype(jnp.float32)
+                out = _saturate(jnp.sqrt(af * af + bf * bf), img.dtype)
+                bands = bands[:-2] + [(out, oy, ox)]
+            elif mode == "tap":
+                new = apply_one(s, ph, pw, stride, *bands[tap])
+                bands = [crop(*b, ph, pw) for b in bands] + [new]
+            else:                        # map over every band
+                bands = [apply_one(s, ph, pw, stride, *b) for b in bands]
+        outs = []
+        for (b, oy, ox), (hk, wk) in zip(bands, sizes):
+            assert oy <= 0 and ox <= 0, "chain_ref: halo over-consumed"
+            outs.append(b[-oy:-oy + hk, -ox:-ox + wk])
+        return tuple(outs)
+
+    def one_image(im):                  # (H, W) or (H, W, C)
         x = _pad_replicate(im, PH, PW)
         if x.ndim == 2:
             return plane_chain(x)
-        return jnp.stack([plane_chain(x[..., c]) for c in range(x.shape[-1])],
-                         axis=-1)
+        chans = [plane_chain(x[..., c]) for c in range(x.shape[-1])]
+        return tuple(jnp.stack([ch[k] for ch in chans], axis=-1)
+                     for k in range(len(chans[0])))
 
     if img.ndim == 4:
-        return jnp.stack([one_image(img[b]) for b in range(img.shape[0])])
-    return one_image(img)
+        per = [one_image(img[b]) for b in range(img.shape[0])]
+        outs = tuple(jnp.stack([p[k] for p in per]) for k in range(len(per[0])))
+    else:
+        outs = one_image(img)
+    return outs[0] if len(outs) == 1 else outs
 
 
 def bow_assign_ref(desc: Array, centroids: Array) -> tuple[Array, Array]:

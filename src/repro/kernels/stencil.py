@@ -13,28 +13,56 @@ compiles a *chain* of stages over a batched, multi-channel image into a
   * the input is normalized to planes `(N, H, W)` (N = batch x channels) and
     the grid is `(N, n_bands)` — the per-channel / per-image Python loops of
     the old wrappers become grid dimensions;
-  * each grid step DMAs **one** overlapping window of
-    `rows + 2*PH` input rows (`pl.Unblocked` indexing), where `PH` is the
-    *accumulated* row halo of the whole chain — replacing the old
-    prev/cur/next triple-BlockSpec trick, so a band's bytes cross HBM->VMEM
-    once instead of three times;
+  * each grid step DMAs **one** overlapping window of input rows
+    (`pl.Unblocked` indexing) sized by the backward recurrence
+    `R_in = R_out * stride + 2*halo` over the whole chain — replacing the
+    old prev/cur/next triple-BlockSpec trick, so a band's bytes cross
+    HBM->VMEM once instead of three times;
   * every stage runs in-register/in-VMEM on the band, consuming its own halo
     (the band shrinks by the stage halo per side), and only the final
-    `rows`-row result is written back to HBM.
+    output rows are written back to HBM.
+
+Beyond the PR-1 geometry-preserving ops, the Stage IR supports:
+
+  * **strided stages** — a stage may change the output geometry:
+    `pyr_down_stage()` (OpenCV pyrDown: 5x5 Gaussian + 2x decimation,
+    out = ceil(size/2)) and `resize2_stage()` (2x2-mean downsample,
+    out = floor(size/2)).  Decimation happens in VMEM, so a blur ladder
+    plus its downsample never round-trips HBM at full resolution.
+  * **multi-band state** — the value flowing between stages is an ordered
+    tuple of bands (all at the same resolution, each with its own dtype):
+      - `sobel_stage()` replaces the last band with a widened f32 dx/dy
+        pair (OpenCV Sobel ksize=3);
+      - `grad_stage()` (`grad_mag`) *consumes a pair* when two or more
+        bands are live (sqrt(dx^2+dy^2), halo 0) and falls back to the
+        single-band central-difference magnitude otherwise;
+      - any stage built with `tap=<band index>` applies to that band and
+        *appends* its result, so a Gaussian octave ladder
+        (g -> blur -> blur -> ...) emits every scale as an output of ONE
+        launch (`cv.features.gaussian_octave`).  A *strided* tap
+        (`pyr_down_stage(tap=...)`) is terminal-only: it downsamples one
+        band for the next pyramid octave while the full-resolution scales
+        are stored alongside it.
 
 Border semantics: the chain is computed on the edge-replicated *extended
 domain* — stage s sees stage s-1's values computed at out-of-image
 coordinates from the edge-padded input, not an edge-replication of stage
 s-1's output. For a single stage this is exactly OpenCV BORDER_REPLICATE
-(bit-identical to `kernels/ref.py`); for multi-stage chains it matches
+(matches `kernels/ref.py`); for multi-stage chains it matches
 `ref.chain_ref`, and differs from the staged baseline only inside the
-accumulated-halo border ring. See EXPERIMENTS.md §Perf for the band/halo
-diagram.
+accumulated-halo border ring.  (On u8 carriers, float-accumulating stages
+may differ from the oracle by 1 where the kernel's FMA ordering lands a
+1-ulp different value on a .5 rounding tie — morphology/threshold-only
+chains are bit-exact.)  Strided stages decimate on image-aligned
+coordinates (even rows/cols of the *image*, as OpenCV pyrDown does),
+which the geometry planning below guarantees by making the pad offsets
+divisible by the total stride product. See EXPERIMENTS.md §Perf for the
+band/halo diagram and the stage table.
 
 Block-width selection: `vc=None` autotunes via
 `repro.core.autotune.chain_working_set` — the largest lmul whose
-accumulated-halo, widened working set fits VMEM (the paper's m8 ceiling,
-chain-aware).
+accumulated-halo, widened, band-count-aware working set fits VMEM (the
+paper's m8 ceiling, chain-aware).
 """
 from __future__ import annotations
 
@@ -45,8 +73,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import uintr
-from repro.core.autotune import WIDENING_OPS  # noqa: F401  (re-export)
+from repro.core import compat, uintr
+from repro.core.autotune import (WIDENING_OPS,  # noqa: F401  (re-export)
+                                 chain_accumulated_halo, resolve_chain)
 from repro.core.vector import VectorConfig
 
 from . import ref
@@ -54,7 +83,20 @@ from . import ref
 Array = jax.Array
 # number of tap arrays each op carries as pallas inputs
 _N_WEIGHTS = {"filter2d": 1, "sep_filter": 2, "erode": 0, "dilate": 0,
-              "threshold": 0, "affine": 0, "grad_mag": 0}
+              "threshold": 0, "affine": 0, "grad_mag": 0, "box": 0,
+              "pyr_down": 1, "resize2": 0, "sobel": 0}
+# output decimation per stage kind (all other ops preserve geometry)
+_STRIDES = {"pyr_down": (2, 2), "resize2": (2, 2)}
+
+
+def _out_hw(op: str | None, h: int, w: int) -> tuple[int, int]:
+    """Output (h, w) of one stage applied to an (h, w) image: replicate-border
+    halo ops preserve size; pyrDown is ceil-half (OpenCV), resize2 floor."""
+    if op == "pyr_down":
+        return (h + 1) // 2, (w + 1) // 2
+    if op == "resize2":
+        return h // 2, w // 2
+    return h, w
 
 
 # ---------------------------------------------------------------------------
@@ -67,10 +109,14 @@ class Stage:
 
     `static` is baked into the jit/pallas trace; `weights` (filter taps) are
     ordinary traced inputs so re-running with new taps does not recompile.
+    `tap` (a band index, negatives allowed) switches the stage from
+    *mapping over* the band state to *appending* its result: the op reads
+    band `tap` and the new band is appended to the state.
     """
     op: str
     static: tuple = ()
     weights: tuple = field(default_factory=tuple)
+    tap: int | None = None
 
     def __post_init__(self):
         if self.op not in _N_WEIGHTS:
@@ -81,36 +127,45 @@ class Stage:
 
     @property
     def halo(self) -> tuple[int, int]:
-        """(row, col) halo this stage consumes per side."""
+        """(row, col) halo this stage consumes per side (single-band form;
+        chain walkers resolve the arity-dependent grad_mag case)."""
         if self.op == "filter2d":
             kh, kw = self.weights[0].shape
             return kh // 2, kw // 2
         if self.op == "sep_filter":
             kx, ky = self.weights
             return ky.shape[0] // 2, kx.shape[0] // 2
-        if self.op in ("erode", "dilate"):
+        if self.op in ("erode", "dilate", "box"):
             return self.static[0], self.static[0]
-        if self.op == "grad_mag":
+        if self.op in ("grad_mag", "sobel"):
             return 1, 1
+        if self.op == "pyr_down":
+            return 2, 2
         return 0, 0
 
+    @property
+    def stride(self) -> tuple[int, int]:
+        """(row, col) output decimation factor."""
+        return _STRIDES.get(self.op, (1, 1))
 
-def filter_stage(kernel: Array) -> Stage:
+
+def filter_stage(kernel: Array, *, tap: int | None = None) -> Stage:
     """Direct 2D correlation with an odd (kh, kw) tap matrix."""
     kernel = jnp.asarray(kernel, jnp.float32)
-    return Stage("filter2d", weights=(kernel,))
+    return Stage("filter2d", weights=(kernel,), tap=tap)
 
 
-def sep_filter_stage(kx: Array, ky: Array) -> Stage:
+def sep_filter_stage(kx: Array, ky: Array, *, tap: int | None = None) -> Stage:
     """Separable filter: row taps kx (kw,), then column taps ky (kh,)."""
-    return Stage("sep_filter",
+    return Stage("sep_filter", tap=tap,
                  weights=(jnp.asarray(kx, jnp.float32), jnp.asarray(ky, jnp.float32)))
 
 
-def gaussian_stage(ksize: int, sigma: float | None = None) -> Stage:
+def gaussian_stage(ksize: int, sigma: float | None = None, *,
+                   tap: int | None = None) -> Stage:
     """OpenCV GaussianBlur as a separable stage."""
     k1 = ref.gaussian_kernel1d(ksize, sigma)
-    return sep_filter_stage(k1, k1)
+    return sep_filter_stage(k1, k1, tap=tap)
 
 
 def erode_stage(r: int) -> Stage:
@@ -122,8 +177,15 @@ def dilate_stage(r: int) -> Stage:
     return Stage("dilate", static=(int(r),))
 
 
+def box_stage(r: int, *, tap: int | None = None) -> Stage:
+    """OpenCV blur(): normalized (2r+1)^2 box filter."""
+    return Stage("box", static=(int(r),), tap=tap)
+
+
 def threshold_stage(thresh: float, maxval: float = 255.0) -> Stage:
-    """Binary threshold: maxval where x > thresh else 0 (OpenCV THRESH_BINARY)."""
+    """Binary threshold: maxval where x > thresh else 0 (OpenCV THRESH_BINARY).
+    The comparison runs in f32 so fractional thresholds are honored on
+    integer carriers (127.5 on u8 means x >= 128, not x > 127)."""
     return Stage("threshold", static=(float(thresh), float(maxval)))
 
 
@@ -133,19 +195,43 @@ def affine_stage(scale: float, offset: float = 0.0) -> Stage:
 
 
 def grad_stage() -> Stage:
-    """Central-difference gradient magnitude sqrt(dx^2 + dy^2)."""
+    """Gradient magnitude sqrt(dx^2 + dy^2).
+
+    On a single-band state: central-difference gradients (halo 1).  After a
+    `sobel_stage()` (or any >= 2-band state): consumes the last two bands as
+    the dx/dy pair (halo 0)."""
     return Stage("grad_mag")
 
 
+def sobel_stage() -> Stage:
+    """OpenCV Sobel ksize=3 pair: replaces the last band with widened f32
+    dx = [1,2,1]^T (x) [-1,0,1] and dy = dx^T bands."""
+    return Stage("sobel")
+
+
+def pyr_down_stage(*, tap: int | None = None) -> Stage:
+    """OpenCV pyrDown: 5-tap [1,4,6,4,1]/16 separable Gaussian + 2x
+    decimation on even image coordinates; out = ceil(size/2).  As a map
+    stage it downsamples the whole state mid-chain; as a terminal tap it
+    emits the next pyramid octave's base alongside the full-res outputs."""
+    k1 = jnp.asarray([1.0, 4.0, 6.0, 4.0, 1.0], jnp.float32) / 16.0
+    return Stage("pyr_down", weights=(k1,), tap=tap)
+
+
+def resize2_stage(*, tap: int | None = None) -> Stage:
+    """2x downsample by 2x2 mean (cv.imgproc.resize_half); out = floor(size/2)."""
+    return Stage("resize2", tap=tap)
+
+
 def chain_halo(stages) -> tuple[int, int]:
-    """Accumulated (row, col) halo of the whole chain."""
-    hs = [s.halo for s in stages]
-    return sum(h for h, _ in hs), sum(w for _, w in hs)
+    """Accumulated (row, col) halo of the whole chain, in input-resolution
+    units (each stage's halo scaled by the map strides before it)."""
+    return chain_accumulated_halo(stages)
 
 
 # ---------------------------------------------------------------------------
-# In-kernel stage bodies — each maps an (R_in, WP) band to (R_in - 2*ph, WP)
-# in the carrier dtype; widened f32 intermediates never leave VMEM.
+# In-kernel stage bodies — each maps an (R_in, WP) band to its output-rows
+# band in the band's dtype; widened f32 intermediates never leave VMEM.
 # ---------------------------------------------------------------------------
 
 def _pack(acc: Array, carrier) -> Array:
@@ -200,6 +286,46 @@ def _apply_sep_filter(band, wts, static, carrier, *, interp=False):
     return _pack(acc, carrier)
 
 
+def _apply_box(band, wts, static, carrier, *, interp=False):
+    (r,) = static
+    k = 2 * r + 1
+    x = _expand_once(band, interp)
+    rowacc = jnp.zeros_like(x)
+    for j in range(k):
+        rowacc = uintr.v_add(uintr.v_shift_cols(x, r - j), rowacc)
+    out_rows = band.shape[-2] - 2 * r
+    acc = jnp.zeros(_out_shape(band, out_rows), jnp.float32)
+    for i in range(k):
+        acc = uintr.v_add(rowacc[..., i:i + out_rows, :], acc)
+    return _pack(acc * jnp.float32(1.0 / (k * k)), carrier)
+
+
+def _apply_pyr_down(band, wts, static, carrier, *, interp=False):
+    """5-tap separable Gaussian, then decimation of even rows/cols.  The
+    driver sizes the band so the valid output has exactly 2x the output
+    rows, and places it so local-even rows/cols are image-even."""
+    (k1,) = wts
+    x = _expand_once(band, interp)
+    k1 = k1.astype(jnp.float32)
+    rowacc = jnp.zeros_like(x)
+    for j in range(5):
+        rowacc = uintr.v_fma(uintr.v_shift_cols(x, 2 - j), k1[j], rowacc)
+    out_rows = band.shape[-2] - 4
+    acc = jnp.zeros(_out_shape(band, out_rows), jnp.float32)
+    for i in range(5):
+        acc = uintr.v_fma(rowacc[..., i:i + out_rows, :], k1[i], acc)
+    return _pack(acc[..., 0::2, 0::2], carrier)
+
+
+def _apply_resize2(band, wts, static, carrier, *, interp=False):
+    """2x2-mean downsample: row pairs + lane-shifted column pairs, * 0.25."""
+    x = _expand_once(band, interp)
+    rows = band.shape[-2]
+    r = x[..., 0:rows:2, :] + x[..., 1:rows:2, :]
+    c = uintr.v_add(r, uintr.v_shift_cols(r, -1))
+    return _pack(c[..., 0::2] * jnp.float32(0.25), carrier)
+
+
 def _morph_identity(dtype, op):
     """Identity element of min/max for the carrier dtype."""
     if jnp.issubdtype(dtype, jnp.floating):
@@ -243,10 +369,12 @@ def _apply_morph(band, wts, static, carrier, *, op, interp=False):
 
 def _apply_threshold(band, wts, static, carrier, *, interp=False):
     thresh, maxval = static
-    t = jnp.asarray(thresh).astype(band.dtype)
+    # compare in f32: fractional thresholds must not truncate on integer
+    # carriers (thresh=127.5 on u8 is x >= 128, not x > 127)
+    t = jnp.float32(thresh)
     hi = jnp.asarray(maxval).astype(carrier)
     lo = jnp.asarray(0).astype(carrier)
-    return uintr.v_select(band > t, hi, lo)
+    return uintr.v_select(uintr.v_expand_f32(band) > t, hi, lo)
 
 
 def _apply_affine(band, wts, static, carrier, *, interp=False):
@@ -263,6 +391,31 @@ def _apply_grad_mag(band, wts, static, carrier, *, interp=False):
     return _pack(jnp.sqrt(dx * dx + dy * dy), carrier)
 
 
+def _apply_sobel(band, *, interp=False):
+    """dx = [1,2,1]^T (x) [-1,0,1], dy = transpose — widened f32 pair (signed
+    gradients cannot live on a u8 carrier)."""
+    x = _expand_once(band, interp)
+    out_rows = band.shape[-2] - 2
+    cd = uintr.v_sub(uintr.v_shift_cols(x, -1), uintr.v_shift_cols(x, 1))
+    cs = uintr.v_add(uintr.v_add(uintr.v_shift_cols(x, 1), uintr.v_shift_cols(x, -1)),
+                     2.0 * x)
+    if interp:
+        cd = _materialize(cd)   # 3 row-tap consumers each (see _expand_once)
+        cs = _materialize(cs)
+    dx = (cd[..., 0:out_rows, :] + 2.0 * cd[..., 1:1 + out_rows, :]
+          + cd[..., 2:2 + out_rows, :])
+    dy = cs[..., 2:2 + out_rows, :] - cs[..., 0:out_rows, :]
+    return dx, dy
+
+
+def _apply_grad_pair(dx, dy, carrier):
+    """sqrt(dx^2 + dy^2) over the last two bands (the Sobel pair), packed
+    back to the carrier dtype."""
+    dxf = uintr.v_expand_f32(dx)
+    dyf = uintr.v_expand_f32(dy)
+    return _pack(jnp.sqrt(dxf * dxf + dyf * dyf), carrier)
+
+
 _APPLY = {
     "filter2d": _apply_filter2d,
     "sep_filter": _apply_sep_filter,
@@ -271,6 +424,9 @@ _APPLY = {
     "threshold": _apply_threshold,
     "affine": _apply_affine,
     "grad_mag": _apply_grad_mag,
+    "box": _apply_box,
+    "pyr_down": _apply_pyr_down,
+    "resize2": _apply_resize2,
 }
 
 
@@ -283,17 +439,44 @@ def _materialize(band: Array) -> Array:
                                  (1,) * band.ndim, (1,) * band.ndim, "VALID")
 
 
-def _chain_kernel(x_ref, *refs, spec, rows, carrier, interp):
-    out_ref = refs[-1]
-    w_refs = refs[:-1]
-    band = x_ref[...]                    # (P, rows + 2*PH, WP) carrier dtype
+def _crop_rows(band: Array, ph: int) -> Array:
+    """Crop a pass-through band's rows by the active stage's halo so the
+    whole band state stays row-aligned."""
+    return band if ph == 0 else band[..., ph:band.shape[-2] - ph, :]
+
+
+def _chain_kernel(x_ref, *refs, plan, carrier, interp, n_out):
+    """plan: per-stage (op, static, mode, tap_idx, (ph, pw)).  The band
+    state is a list; all bands share rows (the driver's backward recurrence
+    sizes the input window so every shape below is exact)."""
+    out_refs = refs[len(refs) - n_out:]
+    w_refs = refs[:len(refs) - n_out]
+    bands = [x_ref[...]]                 # (P, R_window, WP) carrier dtype
     wi = 0
-    for op, static in spec:
+    for op, static, mode, tap, (ph, pw) in plan:
         nw = _N_WEIGHTS[op]
         wts = tuple(w_refs[wi + t][...] for t in range(nw))
         wi += nw
-        band = _APPLY[op](band, wts, static, carrier, interp=interp)
-    out_ref[...] = band                  # (P, rows, WP)
+        if mode == "emit":               # sobel: last band -> f32 (dx, dy)
+            dx, dy = _apply_sobel(bands[-1], interp=interp)
+            bands = [_crop_rows(b, ph) for b in bands[:-1]] + [dx, dy]
+        elif mode == "reduce":           # grad_mag pair: last two -> one
+            out = _apply_grad_pair(bands[-2], bands[-1], carrier)
+            bands = [_crop_rows(b, ph) for b in bands[:-2]] + [out]
+        elif mode == "tap":              # apply to band `tap`, append result
+            new = _APPLY[op](bands[tap], wts, static, bands[tap].dtype,
+                             interp=interp)
+            if interp:
+                # a tapped band has >1 consumer (the out store + later taps
+                # + per-stage crops); pin it or XLA-CPU loop fusion
+                # re-derives the whole ladder per consumer (see §Perf)
+                new = _materialize(new)
+            bands = [_crop_rows(b, ph) for b in bands] + [new]
+        else:                            # map over every band
+            bands = [_APPLY[op](b, wts, static, b.dtype, interp=interp)
+                     for b in bands]
+    for out_ref, b in zip(out_refs, bands):
+        out_ref[...] = b
 
 
 # ---------------------------------------------------------------------------
@@ -323,36 +506,84 @@ def count_pallas_calls(fn, *args, **kwargs) -> int:
             if eqn.primitive.name == "pallas_call":
                 n += 1
             for v in eqn.params.values():
-                if isinstance(v, jax.core.ClosedJaxpr):
+                if isinstance(v, compat.ClosedJaxpr):
                     n += walk(v.jaxpr)
-                elif isinstance(v, jax.core.Jaxpr):
+                elif isinstance(v, compat.Jaxpr):
                     n += walk(v)
         return n
     return walk(jax.make_jaxpr(fn)(*args, **kwargs).jaxpr)
 
 
+def _band_meta(resolved, carrier):
+    """Final band descriptors: per output band (dtype, source op or None).
+    The source op is set for tapped bands so their output geometry rule
+    (`_out_hw`) and stride divisor apply; map/reduce bands are full-res."""
+    bands = [(carrier, None)]
+    for op, mode, halo, stride, n_in, n_out, tap in resolved:
+        if mode == "emit":
+            bands = bands[:-1] + [(jnp.float32, None), (jnp.float32, None)]
+        elif mode == "reduce":
+            bands = bands[:-2] + [(carrier, None)]
+        elif mode == "tap":
+            bands = bands + [(bands[tap][0], op)]
+    return bands
+
+
 @functools.partial(jax.jit, static_argnames=("spec", "vc"))
-def _chain_planes(planes: Array, weights: tuple, spec: tuple, vc: VectorConfig) -> Array:
-    """(N, H, W) planes -> (N, H, W), the whole chain in one pallas_call.
+def _chain_planes(planes: Array, weights: tuple, spec: tuple,
+                  vc: VectorConfig) -> tuple:
+    """(N, H, W) planes -> tuple of output bands (N, H_k, W_k): the whole
+    chain in one pallas_call.
 
     Grid = (N / P, n_bands) where P is the plane block (autotune.plane_block):
     the batch/channel axis is the second register-block dimension, amortizing
-    per-grid-step overhead the same way lmul widens the band."""
+    per-grid-step overhead the same way lmul widens the band.  Strided
+    stages shrink the store-side geometry (out_specs per band); the input
+    window is sized by the backward recurrence R_in = R_out*stride + 2*halo."""
     from repro.core.autotune import plane_block
 
     stages = _respec(spec, weights)
+    resolved = resolve_chain(stages)
     N, H, W = planes.shape
-    ph, pw = chain_halo(stages)
+    ph_in, pw_in = chain_accumulated_halo(stages)
     rows = vc.rows(planes.dtype)
-    n_bands = -(-H // rows)
     P = plane_block(stages, W, N, vc, in_dtype=planes.dtype)
     n_pad = (-N) % P
 
-    wp = pw + W + pw
+    # forward geometry: final full-res image size + total map stride
+    h_fin, w_fin = H, W
+    sy_map = sx_map = 1
+    for op, mode, halo, stride, _, _, _ in resolved:
+        if mode == "map":
+            h_fin, w_fin = _out_hw(op, h_fin, w_fin)
+            sy_map *= stride[0]
+            sx_map *= stride[1]
+    bands = _band_meta(resolved, planes.dtype)
+    # per-band stride divisor below the final state scale (terminal taps)
+    divs = [_STRIDES.get(src_op, (1, 1)) for _, src_op in bands]
+    s_all_y = sy_map * max(d for d, _ in divs)
+    s_all_x = sx_map * max(d for _, d in divs)
+    if rows % s_all_y or vc.lane % s_all_x:
+        raise ValueError(f"chain stride product ({s_all_y}, {s_all_x}) must "
+                         f"divide the band rows ({rows}) and lane ({vc.lane})")
+
+    # backward recurrence: input window rows for one band step of `rows`
+    r_window = rows
+    for op, mode, halo, stride, _, _, _ in reversed(resolved):
+        r_window = r_window * (stride[0] if mode == "map" else 1) + 2 * halo[0]
+    step_in = rows * sy_map
+    n_bands = max(1, -(-h_fin // rows))
+    t_rows = (n_bands - 1) * step_in + r_window
+
+    # column geometry: left pad divisible by the total stride product so
+    # in-kernel even-index decimation lands on even *image* coordinates
+    pw_l = pw_in + (-pw_in) % s_all_x
+    wp = pw_l + W + pw_in
     wp += (-wp) % vc.lane
     x = jnp.pad(planes,
-                ((0, n_pad), (ph, n_bands * rows - H + ph), (pw, wp - W - pw)),
-                mode="edge")
+                ((0, n_pad), (ph_in, max(0, t_rows - ph_in - H)),
+                 (pw_l, wp - pw_l - W)),
+                mode="edge")[:, :t_rows]
 
     w_specs, w_args = [], []
     for s in stages:
@@ -360,22 +591,39 @@ def _chain_planes(planes: Array, weights: tuple, spec: tuple, vc: VectorConfig) 
             w_specs.append(pl.BlockSpec(w.shape, lambda n, i, nd=w.ndim: (0,) * nd))
             w_args.append(w)
 
-    out = pl.pallas_call(
-        functools.partial(_chain_kernel, spec=spec, rows=rows,
-                          carrier=planes.dtype, interp=vc.run_interpret),
+    plan = tuple((s.op, s.static, mode, tap, halo)
+                 for s, (op, mode, halo, stride, n_in, n_out, tap)
+                 in zip(stages, resolved))
+
+    out_specs, out_shapes, crops = [], [], []
+    for (dtype, src_op), (dy, dx) in zip(bands, divs):
+        rows_k, wp_k = rows // dy, wp // (sx_map * dx)
+        h_k, w_k = _out_hw(src_op, h_fin, w_fin)
+        out_specs.append(pl.BlockSpec((P, rows_k, wp_k),
+                                      lambda n, i: (n, i, 0)))
+        out_shapes.append(jax.ShapeDtypeStruct(
+            (N + n_pad, n_bands * rows_k, wp_k), dtype))
+        crops.append((h_k, w_k, pw_l // (sx_map * dx)))
+
+    outs = pl.pallas_call(
+        functools.partial(_chain_kernel, plan=plan, carrier=planes.dtype,
+                          interp=vc.run_interpret, n_out=len(bands)),
         grid=((N + n_pad) // P, n_bands),
-        in_specs=[pl.BlockSpec((P, rows + 2 * ph, wp),
-                               lambda n, i: (n * P, i * rows, 0),
+        in_specs=[pl.BlockSpec((P, r_window, wp),
+                               lambda n, i: (n * P, i * step_in, 0),
                                indexing_mode=pl.Unblocked())] + w_specs,
-        out_specs=pl.BlockSpec((P, rows, wp), lambda n, i: (n, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((N + n_pad, n_bands * rows, wp), planes.dtype),
+        out_specs=out_specs,
+        out_shape=out_shapes,
         interpret=vc.run_interpret,
     )(x, *w_args)
-    return out[:N, :H, pw:pw + W]
+    if not isinstance(outs, (list, tuple)):
+        outs = (outs,)
+    return tuple(o[:N, :h_k, pw_k:pw_k + w_k]
+                 for o, (h_k, w_k, pw_k) in zip(outs, crops))
 
 
 def _spec_of(stages) -> tuple:
-    return tuple((s.op, s.static) for s in stages)
+    return tuple((s.op, s.static, s.tap) for s in stages)
 
 
 def _flat_weights(stages) -> tuple:
@@ -385,19 +633,24 @@ def _flat_weights(stages) -> tuple:
 def _respec(spec, weights) -> tuple[Stage, ...]:
     """Rebuild Stage objects from the static spec + flat weight list."""
     out, wi = [], 0
-    for op, static in spec:
+    for op, static, tap in spec:
         nw = _N_WEIGHTS[op]
-        out.append(Stage(op, static, tuple(weights[wi:wi + nw])))
+        out.append(Stage(op, static, tuple(weights[wi:wi + nw]), tap))
         wi += nw
     return tuple(out)
 
 
-def fused_chain(img: Array, stages, *, vc: VectorConfig | None = None) -> Array:
+def fused_chain(img: Array, stages, *, vc: VectorConfig | None = None):
     """Run a stage chain over an image in ONE Pallas launch.
 
     img: (H, W), (H, W, C) or (B, H, W, C); u8 / f32 / bf16 carrier.
     vc: block width; None = chain-aware autotune (largest lmul whose
-        accumulated-halo working set fits VMEM).
+        accumulated-halo, band-count-aware working set fits VMEM).
+
+    Returns a single array when the chain ends with one live band, else a
+    tuple of arrays (one per band — e.g. a Gaussian ladder's scales plus a
+    pyrDown next-octave base, or a Sobel dx/dy pair), each with the
+    geometry its band's stride history implies.
     """
     stages = tuple(stages)
     if not stages:
@@ -412,14 +665,18 @@ def fused_chain(img: Array, stages, *, vc: VectorConfig | None = None) -> Array:
 
     spec, weights = _spec_of(stages), _flat_weights(stages)
     if img.ndim == 2:
-        return _chain_planes(img[None], weights, spec, vc)[0]
-    if img.ndim == 3:                      # (H, W, C) -> planes (C, H, W)
+        outs = _chain_planes(img[None], weights, spec, vc)
+        outs = tuple(o[0] for o in outs)
+    elif img.ndim == 3:                    # (H, W, C) -> planes (C, H, W)
         planes = jnp.moveaxis(img, -1, 0)
-        out = _chain_planes(planes, weights, spec, vc)
-        return jnp.moveaxis(out, 0, -1)
-    if img.ndim == 4:                      # (B, H, W, C) -> planes (B*C, H, W)
+        outs = _chain_planes(planes, weights, spec, vc)
+        outs = tuple(jnp.moveaxis(o, 0, -1) for o in outs)
+    elif img.ndim == 4:                    # (B, H, W, C) -> planes (B*C, H, W)
         B, H, W, C = img.shape
         planes = jnp.moveaxis(img, -1, 1).reshape(B * C, H, W)
-        out = _chain_planes(planes, weights, spec, vc)
-        return jnp.moveaxis(out.reshape(B, C, H, W), 1, -1)
-    raise ValueError(f"fused_chain: unsupported rank {img.ndim}")
+        outs = _chain_planes(planes, weights, spec, vc)
+        outs = tuple(jnp.moveaxis(o.reshape(B, C, *o.shape[1:]), 1, -1)
+                     for o in outs)
+    else:
+        raise ValueError(f"fused_chain: unsupported rank {img.ndim}")
+    return outs[0] if len(outs) == 1 else outs

@@ -4,13 +4,41 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.cv import bow, features, pipeline, svm
+from repro.cv import bow, features, imgproc, pipeline, svm
 from repro.data.synthetic import ImageStream
 
 
 @pytest.fixture(scope="module")
 def imgs():
     return ImageStream().batch(40, split="train")
+
+
+def test_resize_half_preserves_dtype():
+    """Regression (src/repro/cv/imgproc.py): the pyramid downsample must not
+    silently promote u8 to float32 — round+clip back to the carrier."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 256, (33, 47), dtype=np.uint8))
+    y = imgproc.resize_half(x)
+    assert y.dtype == jnp.uint8 and y.shape == (16, 23)
+    m = np.asarray(x)[:32, :46].astype(np.float32).reshape(16, 2, 23, 2).mean((1, 3))
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.clip(np.round(m), 0, 255).astype(np.uint8))
+    xf = x.astype(jnp.float32)
+    assert imgproc.resize_half(xf).dtype == jnp.float32  # widening is explicit
+
+
+def test_sift_octave_is_one_launch():
+    """The SIFT scale ladder + next-octave downsample is ONE fused launch."""
+    from repro.kernels import stencil
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal((48, 64)).astype(np.float32))
+    stencil.reset_launch_counter()
+    pyr, base = features.gaussian_octave(g, n_scales=4)
+    assert stencil.launch_count() == 1
+    assert pyr.shape == (7, 48, 64) and base.shape == (24, 32)
+    # scales blur monotonically (total variation shrinks up the ladder)
+    tv = [float(jnp.abs(jnp.diff(pyr[i], axis=1)).mean()) for i in range(7)]
+    assert all(a >= b for a, b in zip(tv, tv[1:]))
 
 
 def test_sift_shapes(imgs):
