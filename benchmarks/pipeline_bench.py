@@ -155,8 +155,71 @@ def run_octave(*, quick: bool = False):
     return [row]
 
 
+# ---------------------------------------------------------------------------
+# Warp-chain benchmark: the geometric transform fused INTO the octave chain
+# (gather stage) vs the staged path (one warp launch + one gaussian_blur
+# launch per scale, every intermediate round-tripping HBM at full res).
+# ---------------------------------------------------------------------------
+
+
+def staged_warp(g, M):
+    """warp launch + the SAME incremental full-width ladder as the fused
+    chain, one gaussian_blur launch per scale: 1 + n_scales+3 launches.
+    Both sides compute the same pyramid, so the ratio isolates fusion."""
+    from repro.cv import features, imgproc
+    w = imgproc.warp_affine(g, M, vc=VectorConfig(lmul=4))
+    pyr, prev = [], w
+    for k, s in features.ladder_taps(N_SCALES, 1.6):
+        prev = ops.gaussian_blur(prev, k, s, vc=VectorConfig(lmul=4))
+        pyr.append(prev)
+    return jnp.stack(pyr)
+
+
+def run_warp(*, quick: bool = False):
+    import numpy as np
+
+    from repro.cv import features
+
+    H, W = (256, 256) if quick else (512, 512)
+    stream = ImageStream()
+    g = stream.image((H, W), channels=1, seed=0).astype(jnp.float32)
+    th = 0.05
+    M = np.array([[np.cos(th), -np.sin(th), 4.0], [np.sin(th), np.cos(th), -3.0]])
+
+    def fused(x):
+        # the exact chain align_and_detect lowers (shared builder), so the
+        # launch-count gate measures the product path
+        chain = features.aligned_octave_chain(M, (H, W), n_scales=N_SCALES)
+        return jnp.stack(stencil.fused_chain(
+            x, chain, vc=VectorConfig(lmul=4))[1:])
+
+    # acceptance: the geometric transform no longer breaks the fusion —
+    # warp + the whole ladder is ONE pallas_call
+    n_calls = stencil.count_pallas_calls(fused, g)
+    assert n_calls == 1, f"warp chain lowered to {n_calls} pallas_calls, want 1"
+
+    t_fused = time_stats(fused, g, n=3)
+    t_staged = time_stats(lambda x: staged_warp(x, M), g, n=3)
+    speedup = t_staged["best_s"] / t_fused["best_s"]
+    row = {
+        "image": f"{H}x{W}", "dtype": "f32", "n_scales": N_SCALES,
+        "chain": "warp_affine -> gauss ladder",
+        "pallas_calls_fused": n_calls,
+        "pallas_calls_staged": 1 + N_SCALES + 3,
+        "fused_best_s": round(t_fused["best_s"], 4),
+        "staged_best_s": round(t_staged["best_s"], 4),
+        "fused_speedup": round(speedup, 2),
+    }
+    print_table("Fused warp->octave chain (gather stage) vs staged",
+                list(row.keys()), [list(row.values())])
+    save_json("warp", [row])
+    record_result("warp", row)
+    return [row]
+
+
 if __name__ == "__main__":        # PYTHONPATH=src python -m benchmarks.pipeline_bench
     import sys
     run(quick="--quick" in sys.argv)
     run_octave(quick="--quick" in sys.argv)
+    run_warp(quick="--quick" in sys.argv)
     flush_results()

@@ -47,7 +47,8 @@ def _round_lane(vc: VectorConfig, width: int, halo: int) -> int:
 # ops whose intermediates widen to f32 in VMEM — the single source of truth;
 # kernels/stencil.py imports this (core stays import-free of kernels)
 WIDENING_OPS = frozenset({"filter2d", "sep_filter", "grad_mag", "affine",
-                          "box", "pyr_down", "resize2", "sobel"})
+                          "box", "pyr_down", "resize2", "sobel",
+                          "pyr_up", "warp_affine", "remap"})
 
 
 @dataclass(frozen=True)
@@ -60,15 +61,17 @@ class _StageShape:
 def resolve_chain(stages):
     """Static chain walk shared with kernels/stencil.py semantics.
 
-    Returns per-stage records ``(op, mode, halo, stride, bands_in,
-    bands_out, tap)`` where mode is one of map/tap/emit/reduce and ``tap``
-    is the normalized (non-negative) source band index for tap stages,
-    else None.  Stages are duck-typed: ``.op`` and ``.halo`` are required;
-    ``.stride`` defaults to (1, 1) and ``.tap`` (source band index,
-    appended output) to None.  The band arity rules are the IR contract:
-    ``sobel`` replaces the last band with a dx/dy pair, ``grad_mag``
-    consumes the last two bands when at least two are live (pairwise
-    magnitude, halo 0) and otherwise stays the single-band
+    Returns per-stage records ``(op, mode, halo, stride, up, bands_in,
+    bands_out, tap)`` where mode is one of map/tap/emit/reduce, ``up`` is
+    the (row, col) *upsample* factor (fractional stride: pyr_up is
+    (2, 2), everything else (1, 1)) and ``tap`` is the normalized
+    (non-negative) source band index for tap stages, else None.  Stages
+    are duck-typed: ``.op`` and ``.halo`` are required; ``.stride``
+    defaults to (1, 1), ``.upsample`` to (1, 1) and ``.tap`` (source band
+    index, appended output) to None.  The band arity rules are the IR
+    contract: ``sobel`` replaces the last band with a dx/dy pair,
+    ``grad_mag`` consumes the last two bands when at least two are live
+    (pairwise magnitude, halo 0) and otherwise stays the single-band
     central-difference stage, tapped stages append their result.
     """
     n = 1
@@ -77,6 +80,7 @@ def resolve_chain(stages):
         op = s.op
         tap = getattr(s, "tap", None)
         stride = tuple(getattr(s, "stride", (1, 1)))
+        up = tuple(getattr(s, "upsample", (1, 1)))
         halo = tuple(s.halo)
         if op == "sobel":
             if tap is not None:
@@ -85,6 +89,9 @@ def resolve_chain(stages):
         elif op == "grad_mag" and n >= 2:
             mode, halo, n2 = "reduce", (0, 0), n - 1
         elif tap is not None:
+            if up != (1, 1):
+                raise ValueError(f"upsampling stage {op!r} does not support "
+                                 "tap= (mixed-resolution states are map-only)")
             if not -n <= tap < n:
                 raise ValueError(f"stage {op!r}: tap={tap} out of range for "
                                  f"{n} live band(s)")
@@ -92,9 +99,9 @@ def resolve_chain(stages):
             mode, n2 = "tap", n + 1
         else:
             mode, n2 = "map", n
-        out.append((op, mode, halo, stride, n, n2, tap))
+        out.append((op, mode, halo, stride, up, n, n2, tap))
         n = n2
-    for i, (op, mode, halo, stride, _, _, _) in enumerate(out):
+    for i, (op, mode, halo, stride, up, _, _, _) in enumerate(out):
         if stride != (1, 1) and mode != "map" and i != len(out) - 1:
             raise ValueError(f"strided {mode} stage {op!r} must be the final "
                              "stage of the chain (geometry-changing taps are "
@@ -104,15 +111,21 @@ def resolve_chain(stages):
 
 def chain_accumulated_halo(stages) -> tuple[int, int]:
     """(row, col) halo of the whole chain in *input-resolution* units: each
-    stage's halo scaled by the product of the map strides before it."""
+    stage's halo scaled by the net resolution factor before it (map strides
+    shrink downstream halos by their stride; upsamples shrink the scale, so
+    each contribution is the ceil of halo * down/up — over-padding is safe,
+    the replicate extension is value-identical at every coordinate)."""
     ph = pw = 0
-    sy = sx = 1
-    for op, mode, halo, stride, _, _, _ in resolve_chain(stages):
-        ph += halo[0] * sy
-        pw += halo[1] * sx
+    ny = nx = 1          # downsample product of the map stages walked so far
+    dy = dx = 1          # upsample product
+    for op, mode, halo, stride, up, _, _, _ in resolve_chain(stages):
+        ph += -(-halo[0] * ny // dy)
+        pw += -(-halo[1] * nx // dx)
         if mode == "map":
-            sy *= stride[0]
-            sx *= stride[1]
+            ny *= stride[0]
+            nx *= stride[1]
+            dy *= up[0]
+            dx *= up[1]
     return ph, pw
 
 
@@ -131,22 +144,30 @@ def chain_working_set(stages, width: int, in_dtype=jnp.uint8) -> WorkingSet:
     plan = resolve_chain(stages)
     ph_in, pw_in = chain_accumulated_halo(stages)
     itemsize = jnp.dtype(in_dtype).itemsize
+    # constant per-step inputs (filter taps, remap's map planes) are resident
+    # every grid step — a remap's two full-size f32 map bands are the
+    # dominant term and must be charged, not ignored
+    w_bytes = sum(int(w.size) * jnp.dtype(w.dtype).itemsize
+                  for s in stages for w in getattr(s, "weights", ()))
 
     def fn(vc: VectorConfig) -> int:
         rows = vc.rows(in_dtype)
-        # backward recurrence: window rows at the chain input
+        # backward recurrence: window rows at the chain input (upsampling
+        # stages invert it: R_in = ceil(R_out / up) + 2*halo)
         r = rows
-        for op, mode, halo, stride, _, _, _ in reversed(plan):
-            sy = stride[0] if mode == "map" else 1
-            r = r * sy + 2 * halo[0]
+        for op, mode, halo, stride, up, _, _, _ in reversed(plan):
+            if mode == "map":
+                r = -(-r // up[0]) * stride[0] + 2 * halo[0]
+            else:
+                r = r + 2 * halo[0]
         wp = _round_lane(vc, width, pw_in)
-        total = r * wp * itemsize                        # input window DMA
-        scale = 1
+        total = r * wp * itemsize + w_bytes              # input window DMA
+        num, den = 1, 1                # net width scale so far (down / up)
         sizes = [itemsize]                 # live-band element sizes (bytes):
-        for op, mode, halo, stride, n_in, n_out, tap in plan:
-            sy = stride[0] if mode == "map" else 1      # sobel emits f32
-            out_r = (r - 2 * halo[0]) // sy             # bands that stay
-            wp_s = max(vc.lane, wp // scale)            # f32 downstream
+        for op, mode, halo, stride, up, n_in, n_out, tap in plan:
+            sy, uy = (stride[0], up[0]) if mode == "map" else (1, 1)
+            out_r = ((r - 2 * halo[0]) // sy) * uy      # bands that stay
+            wp_s = max(vc.lane, wp * den // num)        # f32 downstream
             widen = op in WIDENING_OPS
             n_part = n_in if mode == "map" else 1        # participating bands
             # in-side: every live band is resident; each participating band
@@ -161,13 +182,17 @@ def chain_working_set(stages, width: int, in_dtype=jnp.uint8) -> WorkingSet:
             elif mode == "tap":
                 sizes = sizes + [sizes[tap]]
             # out-side: f32 accumulators of widening participants + every
-            # band packed at its own dtype, resident until the store
+            # band packed at its own dtype, resident until the store —
+            # upsampled bands are charged at their post-upsample (doubled)
+            # rows and width
+            wp_out = max(vc.lane, wp_s * (up[1] if mode == "map" else 1))
             if widen:
-                total += n_part * out_r * wp_s * 4
-            total += sum(out_r * wp_s * sz for sz in sizes)
+                total += n_part * out_r * wp_out * 4
+            total += sum(out_r * wp_out * sz for sz in sizes)
             r = out_r
             if mode == "map":
-                scale *= sy
+                num *= stride[1]
+                den *= up[1]
         total += rows * wp * itemsize                    # store band(s)
         return total
     return WorkingSet(fn)

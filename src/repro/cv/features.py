@@ -25,6 +25,33 @@ from . import imgproc
 Array = jax.Array
 
 
+def _ksz(s: float) -> int:
+    """Full-width Gaussian support for sigma s: 2*round(3*sigma)+1, >= 3."""
+    return max(3, 2 * int(round(3 * s)) + 1)
+
+
+def ladder_taps(n_scales: int, sigma0: float,
+                max_ksize: int | None = None) -> list[tuple[int, float]]:
+    """Per-stage (ksize, sigma) of the incremental blur ladder.
+
+    The base blur may be capped at max_ksize (sigma0 is small, Lowe's 1.6
+    -> ksize 11), but each incremental tap is sized from its OWN
+    sigma_delta = sqrt(s_i^2 - s_{i-1}^2) at full width: a single global
+    cap silently truncated the large-delta top-of-ladder taps
+    (sigma_delta ~ 2.5+ for deep/large-sigma ladders), biasing the DoG
+    responses against the full-width kernel.  Incremental taps keep the
+    deltas small, so the full width stays affordable."""
+    sigmas = [sigma0 * 2 ** (i / n_scales) for i in range(n_scales + 3)]
+    k0 = _ksz(sigmas[0])
+    taps = [(min(k0, max_ksize) if max_ksize else k0, sigmas[0])]
+    prev = sigmas[0]
+    for s in sigmas[1:]:
+        delta = math.sqrt(max(s * s - prev * prev, 1e-12))
+        taps.append((_ksz(delta), delta))
+        prev = s
+    return taps
+
+
 def gaussian_octave(img: Array, *, n_scales: int = 4, sigma0: float = 1.6,
                     max_ksize: int = 15, with_next_base: bool = True,
                     vc: VectorConfig | None = None
@@ -47,18 +74,14 @@ def gaussian_octave(img: Array, *, n_scales: int = 4, sigma0: float = 1.6,
     appending its band, and the downsample is a terminal strided
     `pyr_down_stage(tap=n_scales)` — every intermediate scale stays
     VMEM-resident instead of costing one gaussian_blur launch + HBM round
-    trip per scale (the old per-scale loop: n_scales+3 launches)."""
-    sigmas = [sigma0 * 2 ** (i / n_scales) for i in range(n_scales + 3)]
+    trip per scale (the old per-scale loop: n_scales+3 launches).
 
-    def ksz(s: float) -> int:
-        return max(3, int(min(2 * round(3 * s) + 1, max_ksize)))
-
-    stages = [stencil.gaussian_stage(ksz(sigmas[0]), sigmas[0])]
-    prev = sigmas[0]
-    for s in sigmas[1:]:
-        delta = math.sqrt(max(s * s - prev * prev, 1e-12))
-        stages.append(stencil.gaussian_stage(ksz(delta), delta, tap=-1))
-        prev = s
+    max_ksize caps the *base* blur only; the incremental taps are sized
+    from their own sigma_delta at full width (see ladder_taps — a global
+    cap used to truncate the top-of-ladder taps and bias the DoG)."""
+    taps = ladder_taps(n_scales, sigma0, max_ksize)
+    stages = [stencil.gaussian_stage(*taps[0])]
+    stages += [stencil.gaussian_stage(k, s, tap=-1) for k, s in taps[1:]]
     if with_next_base:
         stages.append(stencil.pyr_down_stage(tap=n_scales))
     outs = stencil.fused_chain(img, tuple(stages), vc=vc)
@@ -77,30 +100,25 @@ def gradients(img: Array) -> tuple[Array, Array]:
     return mag, ang
 
 
-@functools.partial(jax.jit, static_argnames=("n_scales", "max_kp"))
-def detect_keypoints(img: Array, *, n_scales: int = 4, max_kp: int = 64,
-                     contrast_thresh: float = 0.02, edge_thresh: float = 10.0):
-    """Single-octave DoG detector.
-
-    Returns dict: xy (max_kp, 2) f32, scale (max_kp,) i32, resp (max_kp,),
-    valid (max_kp,) bool.
-    """
-    g = img.astype(jnp.float32)
-    if g.ndim == 3:
-        g = imgproc.rgb_to_gray(g).astype(jnp.float32)
-    g = g / jnp.maximum(jnp.max(g), 1e-6)
+@functools.partial(jax.jit, static_argnames=("max_kp", "border"))
+def _keypoints_from_pyr(pyr: Array, g: Array, *, max_kp: int,
+                        contrast_thresh: float, edge_thresh: float,
+                        border: int) -> dict:
+    """3x3x3 DoG extrema + edge rejection on a prebuilt (S+3, H, W) scale
+    pyramid (shared by detect_keypoints and align_and_detect)."""
     H, W = g.shape
-
-    # Gaussian ladder: ONE fused launch for the whole octave (incremental
-    # sigma taps), not one blur launch per scale; this detector is
-    # single-octave, so skip the next-octave pyrDown tap
-    pyr, _ = gaussian_octave(g, n_scales=n_scales, with_next_base=False)
     dogs = pyr[1:] - pyr[:-1]                                   # (S+2, H, W)
-
     mid = dogs[1:-1]                                            # (S, H, W)
-    # 3x3x3 neighborhood extrema
+
     def shift2(a, di, dj):
-        return jnp.roll(jnp.roll(a, di, axis=1), dj, axis=2)
+        # edge-clamped (replicate) shift: jnp.roll would wrap the opposite
+        # image edge into the neighborhood comparisons, so pixels at the
+        # image border compared against values from across the image —
+        # flipping extremum verdicts whenever the mask admits them
+        ap = jnp.pad(a, ((0, 0), (1, 1), (1, 1)), mode="edge")
+        return ap[:, 1 - di:1 - di + H, 1 - dj:1 - dj + W]
+
+    # 3x3x3 neighborhood extrema
     neigh_max = jnp.full_like(mid, -jnp.inf)
     neigh_min = jnp.full_like(mid, jnp.inf)
     for ds in (-1, 0, 1):
@@ -122,7 +140,6 @@ def detect_keypoints(img: Array, *, n_scales: int = 4, max_kp: int = 64,
     tr, det = dxx + dyy, dxx * dyy - dxy * dxy
     r = edge_thresh
     edge_ok = (det > 0) & (tr * tr * r < (r + 1) ** 2 * det)
-    border = 8
     ii = jnp.arange(H)[None, :, None]
     jj = jnp.arange(W)[None, None, :]
     in_border = (ii >= border) & (ii < H - border) & (jj >= border) & (jj < W - border)
@@ -138,6 +155,71 @@ def detect_keypoints(img: Array, *, n_scales: int = 4, max_kp: int = 64,
             "resp": resp,
             "valid": resp > 0.0,
             "gray": g}
+
+
+def _normalize_gray(img: Array) -> Array:
+    g = img.astype(jnp.float32)
+    if g.ndim == 3:
+        g = imgproc.rgb_to_gray(g).astype(jnp.float32)
+    return g / jnp.maximum(jnp.max(g), 1e-6)
+
+
+@functools.partial(jax.jit, static_argnames=("n_scales", "max_kp", "border"))
+def detect_keypoints(img: Array, *, n_scales: int = 4, max_kp: int = 64,
+                     contrast_thresh: float = 0.02, edge_thresh: float = 10.0,
+                     border: int = 8):
+    """Single-octave DoG detector.
+
+    Returns dict: xy (max_kp, 2) f32, scale (max_kp,) i32, resp (max_kp,),
+    valid (max_kp,) bool.
+    """
+    g = _normalize_gray(img)
+    # Gaussian ladder: ONE fused launch for the whole octave (incremental
+    # sigma taps), not one blur launch per scale; this detector is
+    # single-octave, so skip the next-octave pyrDown tap
+    pyr, _ = gaussian_octave(g, n_scales=n_scales, with_next_base=False)
+    return _keypoints_from_pyr(pyr, g, max_kp=max_kp,
+                               contrast_thresh=contrast_thresh,
+                               edge_thresh=edge_thresh, border=border)
+
+
+def aligned_octave_chain(M, shape, *, n_scales: int = 4,
+                         sigma0: float = 1.6) -> tuple:
+    """The warp -> incremental-Gaussian-ladder stage chain of
+    align_and_detect (shared with benchmarks): the inverse-map affine
+    enters as a gather stage whose displacement bound is extended by the
+    ladder's accumulated halo, and every Gaussian is a tap stage so the
+    warped gray stays live as band 0 and every scale becomes an output
+    band of the single launch."""
+    taps = ladder_taps(n_scales, sigma0)
+    ladder = tuple(stencil.gaussian_stage(k, s, tap=-1) for k, s in taps)
+    ey, ex = stencil.chain_halo(ladder)
+    warp = stencil.warp_affine_stage(M, shape=shape, extend=(ey, ex))
+    return (warp,) + ladder
+
+
+def align_and_detect(img: Array, M, *, n_scales: int = 4, max_kp: int = 64,
+                     contrast_thresh: float = 0.02, edge_thresh: float = 10.0,
+                     border: int = 8, vc: VectorConfig | None = None) -> dict:
+    """Warp -> Gaussian ladder -> DoG keypoints on the *aligned* image, with
+    the geometric transform fused INTO the octave chain: the inverse-map
+    affine enters as a gather stage whose displacement bound is extended by
+    the ladder's accumulated halo, the warped gray stays live as band 0
+    (the first Gaussian taps it instead of mapping over it), and every
+    scale is a tap band — the whole aligned scale pyramid is ONE
+    `pallas_call` (the old path: one warp launch + one blur launch per
+    scale, each round-tripping HBM at full resolution).
+
+    M is the 2x3 dst->src matrix (OpenCV WARP_INVERSE_MAP convention),
+    baked static (its displacement bound sizes the gather halo).  Returns
+    the detect_keypoints dict, with "gray" the warped image."""
+    g = _normalize_gray(img)
+    chain = aligned_octave_chain(M, g.shape, n_scales=n_scales)
+    outs = stencil.fused_chain(g, chain, vc=vc)
+    pyr = jnp.stack(outs[1:])                  # band 0 is the warped gray
+    return _keypoints_from_pyr(pyr, outs[0], max_kp=max_kp,
+                               contrast_thresh=contrast_thresh,
+                               edge_thresh=edge_thresh, border=border)
 
 
 @functools.partial(jax.jit, static_argnames=("patch",))

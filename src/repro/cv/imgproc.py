@@ -26,6 +26,7 @@ erode = kops.erode
 dilate = kops.dilate
 threshold = kops.threshold
 pyr_down = kops.pyr_down
+pyr_up = kops.pyr_up
 box_blur = kops.box_blur
 sobel = kops.sobel
 gaussian_kernel1d = kref.gaussian_kernel1d
@@ -50,6 +51,33 @@ def rgb_to_gray(img: Array) -> Array:
     if img.dtype == jnp.uint8:
         return jnp.clip(jnp.round(g), 0, 255).astype(jnp.uint8)
     return g.astype(img.dtype)
+
+
+def warp_affine(img: Array, M, *, vc: VectorConfig | None = None) -> Array:
+    """OpenCV warpAffine with WARP_INVERSE_MAP (dst->src matrix M, bilinear,
+    replicate border) as ONE fused gather-stage launch.
+
+    M is a 2x3 inverse map: dst(x, y) samples src at (M00 x + M01 y + M02,
+    M10 x + M11 y + M12).  The displacement bound (and so the gather halo)
+    is computed from M over the image rectangle; to fuse a warp *into* a
+    longer chain, build `stencil.warp_affine_stage` directly with
+    extend=<downstream halo> (see features.align_and_detect)."""
+    h, w = ((img.shape[-2], img.shape[-1]) if img.ndim == 2
+            else (img.shape[-3], img.shape[-2]))
+    stage = stencil.warp_affine_stage(M, shape=(h, w))
+    return stencil.fused_chain(img, (stage,), vc=vc)
+
+
+def remap(img: Array, map_x: Array, map_y: Array, *, bound=None,
+          extend=(0, 0), vc: VectorConfig | None = None) -> Array:
+    """OpenCV remap (bilinear, replicate border) as ONE fused gather-stage
+    launch: dst(x, y) samples src at (map_x[y, x], map_y[y, x]).  The (H, W)
+    f32 map planes ride along as per-step-resident chain inputs; the gather
+    halo derives from the maps' max displacement |map - identity| — which
+    needs concrete maps, so under jit (traced maps) pass the (row, col)
+    displacement bound explicitly via bound=."""
+    stage = stencil.remap_stage(map_x, map_y, bound=bound, extend=extend)
+    return stencil.fused_chain(img, (stage,), vc=vc)
 
 
 def resize_half(img: Array, *, vc: VectorConfig | None = None) -> Array:

@@ -18,10 +18,12 @@ from .bow import bow_assign  # noqa: F401
 from .erode import dilate, erode  # noqa: F401
 from .filter2d import filter2d, sep_filter2d  # noqa: F401
 from .stencil import (fused_chain, Stage,  # noqa: F401
-                      affine_stage, box_stage, dilate_stage, erode_stage,
-                      filter_stage, gaussian_stage, grad_stage,
-                      pyr_down_stage, resize2_stage, sep_filter_stage,
-                      sobel_stage, threshold_stage)
+                      affine_disp_bound, affine_stage, box_stage,
+                      dilate_stage, erode_stage, filter_stage,
+                      gaussian_stage, grad_stage, pyr_down_stage,
+                      pyr_up_stage, remap_stage, resize2_stage,
+                      sep_filter_stage, sobel_stage, threshold_stage,
+                      warp_affine_stage)
 
 
 def threshold(img, thresh: float, maxval: float = 255.0, *,
@@ -35,6 +37,13 @@ def pyr_down(img, *, vc: VectorConfig = DEFAULT):
     """OpenCV pyrDown: 5x5 [1,4,6,4,1]/16 Gaussian + 2x decimation on even
     image coordinates; out = ceil(size/2), dtype preserved."""
     return fused_chain(img, (pyr_down_stage(),), vc=vc)
+
+
+def pyr_up(img, *, vc: VectorConfig = DEFAULT):
+    """OpenCV pyrUp: 2x zero-insert upsample + the 5-tap Gaussian x4 (even
+    phase [1,6,1]/8, odd [4,4]/8 per axis); out = 2*size, dtype preserved.
+    The chain IR's first fractional-stride stage."""
+    return fused_chain(img, (pyr_up_stage(),), vc=vc)
 
 
 def box_blur(img, r: int, *, vc: VectorConfig = DEFAULT):

@@ -160,6 +160,66 @@ def _ref_sobel(x):
     return dx, dy
 
 
+def _ref_pyr_up(x):
+    """Valid-mode pyrUp on an extended band: even phase [1,6,1]/8, odd phase
+    [4,4]/8 per axis, interleaved — input (h, w) -> (2(h-2), 2(w-2)), the
+    output origin doubling as 2*(origin+1).  Arithmetic mirrors the fused
+    kernel expression-for-expression so f32 results are bit-identical."""
+    xf = x.astype(jnp.float32)
+    a, b, c = xf[:-2], xf[1:-1], xf[2:]
+    ev = (a + 6.0 * b + c) * jnp.float32(0.125)
+    od = (b + c) * jnp.float32(0.5)
+    t = jnp.stack([ev, od], axis=1).reshape(2 * (x.shape[0] - 2), x.shape[1])
+    left, mid, right = t[:, :-2], t[:, 1:-1], t[:, 2:]
+    evc = (left + 6.0 * mid + right) * jnp.float32(0.125)
+    odc = (mid + right) * jnp.float32(0.5)
+    u = jnp.stack([evc, odc], axis=2)
+    return u.reshape(t.shape[0], 2 * (x.shape[1] - 2))
+
+
+def _ref_bilinear(x, sy, sx, oy, ox):
+    """Bilinear sample of the extended band x (local origin at image (oy,
+    ox)) at image coordinates (sy, sx), replicate-clamped to the band.
+    floor/frac on the *global* coordinate + the lerp order mirror the fused
+    kernel exactly (u8 bit-exactness on .5 rounding ties)."""
+    xf = x.astype(jnp.float32)
+    iy, ix = jnp.floor(sy), jnp.floor(sx)
+    fy, fx = sy - iy, sx - ix
+    ly = jnp.clip(iy.astype(jnp.int32) - oy, 0, x.shape[0] - 2)
+    lx = jnp.clip(ix.astype(jnp.int32) - ox, 0, x.shape[1] - 2)
+    v00, v01 = xf[ly, lx], xf[ly, lx + 1]
+    v10, v11 = xf[ly + 1, lx], xf[ly + 1, lx + 1]
+    top = v00 + (v01 - v00) * fx
+    bot = v10 + (v11 - v10) * fx
+    return top + (bot - top) * fy
+
+
+def _ref_gather(s, b, oy, ox):
+    """One gather stage (warp_affine / remap) on an extended band: evaluate
+    the dst->src map at the band's absolute image coordinates and sample
+    bilinearly.  Output shrinks by the stage halo per side (origin moves by
+    (+hy, +hx)); remap's out-of-image lookups clamp to the map edge."""
+    hy, hx = s.halo
+    h = b.shape[0] - 2 * hy
+    w = b.shape[1] - 2 * hx
+    yy = (oy + hy + jnp.arange(h, dtype=jnp.int32))[:, None]
+    xx = (ox + hx + jnp.arange(w, dtype=jnp.int32))[None, :]
+    if s.op == "warp_affine":
+        m00, m01, m02, m10, m11, m12 = s.static[:6]
+        yf, xf = yy.astype(jnp.float32), xx.astype(jnp.float32)
+        sx = xf * m00 + yf * m01 + m02
+        sy = xf * m10 + yf * m11 + m12
+    else:
+        map_x, map_y = s.weights
+        hm, wm = map_y.shape
+        yc = jnp.clip(yy, 0, hm - 1)
+        xc = jnp.clip(xx, 0, wm - 1)
+        sy = map_y[yc, xc]
+        sx = map_x[yc, xc]
+    out = _ref_bilinear(b, sy, sx, oy, ox)
+    return _saturate(out, b.dtype), oy + hy, ox + hx
+
+
 def chain_ref(img: Array, stages):
     """Oracle for kernels.stencil.fused_chain (duck-typed Stage objects).
 
@@ -185,25 +245,33 @@ def chain_ref(img: Array, stages):
     for s in stages:
         tap = getattr(s, "tap", None)
         stride = tuple(getattr(s, "stride", (1, 1)))
+        up = tuple(getattr(s, "upsample", (1, 1)))
         if s.op == "sobel":
-            resolved.append(("emit", (1, 1), stride, None)); n += 1
+            resolved.append(("emit", (1, 1), stride, up, None)); n += 1
         elif s.op == "grad_mag" and n >= 2:
-            resolved.append(("reduce", (0, 0), stride, None)); n -= 1
+            resolved.append(("reduce", (0, 0), stride, up, None)); n -= 1
         elif tap is not None:
+            if up != (1, 1):
+                raise ValueError(f"chain_ref: upsampling stage {s.op!r} does "
+                                 "not support tap=")
             if not -n <= tap < n:
                 raise ValueError(f"chain_ref: stage {s.op!r} tap={tap} out of "
                                  f"range for {n} live band(s)")
-            resolved.append(("tap", tuple(s.halo), stride, tap % n)); n += 1
+            resolved.append(("tap", tuple(s.halo), stride, up, tap % n)); n += 1
         else:
-            resolved.append(("map", tuple(s.halo), stride, None))
+            resolved.append(("map", tuple(s.halo), stride, up, None))
 
+    # accumulated halo: per-stage ceil of halo * net-downsample/net-upsample
+    # (over-padding is safe: the replicate extension is value-identical at
+    # every coordinate, and the final crop is origin-tracked)
     PH = PW = 0
-    sy = sx = 1
-    for mode, (ph, pw), stride, _ in resolved:
-        PH += ph * sy
-        PW += pw * sx
+    ny = nx = uy = ux = 1
+    for mode, (ph, pw), stride, up, _ in resolved:
+        PH += -(-ph * ny // uy)
+        PW += -(-pw * nx // ux)
         if mode == "map":
-            sy, sx = sy * stride[0], sx * stride[1]
+            ny, nx = ny * stride[0], nx * stride[1]
+            uy, ux = uy * up[0], ux * up[1]
 
     # final image geometry per band: full-res state size + strided-tap rule
     def rule(op, h, w):
@@ -211,6 +279,8 @@ def chain_ref(img: Array, stages):
             return (h + 1) // 2, (w + 1) // 2
         if op == "resize2":
             return h // 2, w // 2
+        if op == "pyr_up":
+            return 2 * h, 2 * w
         return h, w
 
     if img.ndim == 2:
@@ -219,11 +289,11 @@ def chain_ref(img: Array, stages):
         h_fin, w_fin = img.shape[0], img.shape[1]
     else:
         h_fin, w_fin = img.shape[1], img.shape[2]
-    for s, (mode, halo, stride, tap) in zip(stages, resolved):
+    for s, (mode, halo, stride, up, tap) in zip(stages, resolved):
         if mode == "map":
             h_fin, w_fin = rule(s.op, h_fin, w_fin)
     sizes = [(h_fin, w_fin)]
-    for s, (mode, halo, stride, tap) in zip(stages, resolved):
+    for s, (mode, halo, stride, up, tap) in zip(stages, resolved):
         if mode == "emit":
             sizes = sizes[:-1] + [(h_fin, w_fin)] * 2
         elif mode == "reduce":
@@ -244,6 +314,11 @@ def chain_ref(img: Array, stages):
             cs = rs[:, s1:s1 + 2 * mw:2] + rs[:, s1 + 1:s1 + 1 + 2 * mw:2]
             return (_saturate(cs * jnp.float32(0.25), b.dtype),
                     (oy + s0) // 2, (ox + s1) // 2)
+        if s.op == "pyr_up":
+            return (_saturate(_ref_pyr_up(b), b.dtype),
+                    2 * (oy + 1), 2 * (ox + 1))
+        if s.op in ("warp_affine", "remap"):
+            return _ref_gather(s, b, oy, ox)
         new = _ref_valid_op(s, b, b.dtype)
         noy, nox = oy + ph, ox + pw
         if stride != (1, 1):
@@ -259,7 +334,7 @@ def chain_ref(img: Array, stages):
 
     def plane_chain(x):                 # x: extended (H+2PH, W+2PW) plane
         bands = [(x, -PH, -PW)]
-        for s, (mode, (ph, pw), stride, tap) in zip(stages, resolved):
+        for s, (mode, (ph, pw), stride, up, tap) in zip(stages, resolved):
             if mode == "emit":
                 dx, dy = _ref_sobel(bands[-1][0])
                 oy, ox = bands[-1][1] + 1, bands[-1][2] + 1

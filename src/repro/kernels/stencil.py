@@ -67,10 +67,12 @@ paper's m8 ceiling, chain-aware).
 from __future__ import annotations
 
 import functools
+import math
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core import compat, uintr
@@ -81,22 +83,38 @@ from repro.core.vector import VectorConfig
 from . import ref
 
 Array = jax.Array
-# number of tap arrays each op carries as pallas inputs
+# number of tap arrays each op carries as pallas inputs (remap's two are its
+# full-size map planes — per-step-resident chain bands, not filter taps)
 _N_WEIGHTS = {"filter2d": 1, "sep_filter": 2, "erode": 0, "dilate": 0,
               "threshold": 0, "affine": 0, "grad_mag": 0, "box": 0,
-              "pyr_down": 1, "resize2": 0, "sobel": 0}
+              "pyr_down": 1, "resize2": 0, "sobel": 0,
+              "warp_affine": 0, "remap": 2, "pyr_up": 0}
 # output decimation per stage kind (all other ops preserve geometry)
 _STRIDES = {"pyr_down": (2, 2), "resize2": (2, 2)}
+# fractional strides: output *upsample* factor per stage kind
+_UPSAMPLES = {"pyr_up": (2, 2)}
+# gather stages: in-kernel bodies read data-dependent (statically bounded)
+# offsets and need the band's absolute image coordinates
+_GATHER_OPS = frozenset({"warp_affine", "remap"})
 
 
 def _out_hw(op: str | None, h: int, w: int) -> tuple[int, int]:
     """Output (h, w) of one stage applied to an (h, w) image: replicate-border
-    halo ops preserve size; pyrDown is ceil-half (OpenCV), resize2 floor."""
+    halo ops preserve size; pyrDown is ceil-half (OpenCV), resize2 floor,
+    pyrUp doubles exactly."""
     if op == "pyr_down":
         return (h + 1) // 2, (w + 1) // 2
     if op == "resize2":
         return h // 2, w // 2
+    if op == "pyr_up":
+        return 2 * h, 2 * w
     return h, w
+
+
+def _gather_halo(by: float, bx: float) -> tuple[int, int]:
+    """Halo a gather stage consumes per side for a (row, col) displacement
+    bound: floor(b) rows of reach + 1 for the far bilinear tap."""
+    return int(math.floor(by)) + 1, int(math.floor(bx)) + 1
 
 
 # ---------------------------------------------------------------------------
@@ -137,16 +155,26 @@ class Stage:
             return ky.shape[0] // 2, kx.shape[0] // 2
         if self.op in ("erode", "dilate", "box"):
             return self.static[0], self.static[0]
-        if self.op in ("grad_mag", "sobel"):
+        if self.op in ("grad_mag", "sobel", "pyr_up"):
             return 1, 1
         if self.op == "pyr_down":
             return 2, 2
+        if self.op == "warp_affine":
+            return _gather_halo(self.static[6], self.static[7])
+        if self.op == "remap":
+            by, bx, ey, ex = self.static
+            return _gather_halo(by + ey, bx + ex)
         return 0, 0
 
     @property
     def stride(self) -> tuple[int, int]:
         """(row, col) output decimation factor."""
         return _STRIDES.get(self.op, (1, 1))
+
+    @property
+    def upsample(self) -> tuple[int, int]:
+        """(row, col) output upsample factor (fractional stride)."""
+        return _UPSAMPLES.get(self.op, (1, 1))
 
 
 def filter_stage(kernel: Array, *, tap: int | None = None) -> Stage:
@@ -223,9 +251,103 @@ def resize2_stage(*, tap: int | None = None) -> Stage:
     return Stage("resize2", tap=tap)
 
 
+def _affine_disp_over(m, min_y, max_y, min_x, max_x) -> tuple[float, float]:
+    """Max (row, col) |dst->src displacement| of the 2x3 affine m over a
+    coordinate rectangle.  Displacement is affine in (x, y), so the max
+    sits at the rectangle's corners.  Shared by `affine_disp_bound` (the
+    declaration side) and the chain compiler's validation (the check side)
+    so the two can never diverge."""
+    by = bx = 0.0
+    for yc in (float(min_y), float(max_y)):
+        for xc in (float(min_x), float(max_x)):
+            bx = max(bx, abs(m[0][0] * xc + m[0][1] * yc + m[0][2] - xc))
+            by = max(by, abs(m[1][0] * xc + m[1][1] * yc + m[1][2] - yc))
+    return by, bx
+
+
+def affine_disp_bound(M, shape, *, extend=(0, 0)) -> tuple[float, float]:
+    """Max (row, col) |dst->src displacement| of the inverse-map affine M over
+    the (h, w) image rectangle extended by `extend` per side (the halo ring
+    a fused chain's later stages evaluate the warp at)."""
+    m = np.asarray(M, np.float64).reshape(2, 3)
+    h, w = int(shape[0]), int(shape[1])
+    ey, ex = extend
+    return _affine_disp_over(m, -float(ey), h - 1.0 + ey,
+                             -float(ex), w - 1.0 + ex)
+
+
+def warp_affine_stage(M, *, bound=None, shape=None, extend=(0, 0),
+                      tap: int | None = None) -> Stage:
+    """Inverse-map affine warp (OpenCV warpAffine with WARP_INVERSE_MAP):
+    dst(x, y) = bilinear src sample at (M00*x + M01*y + M02,
+    M10*x + M11*y + M12), replicate border.
+
+    The first *gather* stage: the in-kernel body reads data-dependent (but
+    statically bounded) offsets, so M is baked static — its per-band halo is
+    the ceil of the displacement bound of M over the evaluation rectangle.
+    Declare that bound explicitly via `bound=(rows, cols)` or let
+    `shape=(h, w)` (+ `extend=(rows, cols)` when later chain stages consume
+    a halo ring) compute it; the chain compiler re-validates against the
+    actual fused window and raises if the declared bound is too small."""
+    m = np.asarray(M, np.float64).reshape(2, 3)
+    if bound is None:
+        if shape is None:
+            raise ValueError("warp_affine_stage: pass bound=(rows, cols) or "
+                             "shape=(h, w) to size the gather halo")
+        bound = affine_disp_bound(m, shape, extend=extend)
+    static = tuple(float(v) for v in m.reshape(-1))
+    static += (float(bound[0]), float(bound[1]))
+    return Stage("warp_affine", static=static, tap=tap)
+
+
+def remap_stage(map_x, map_y, *, bound=None, extend=(0, 0),
+                tap: int | None = None) -> Stage:
+    """OpenCV remap: dst(x, y) = bilinear src sample at
+    (map_x[y, x], map_y[y, x]), replicate border.
+
+    The (H, W) f32 map planes enter the chain as extra per-step-resident
+    input bands (charged by `autotune.chain_working_set`).  `bound` is the
+    max in-image (row, col) displacement |map - identity| — computed from
+    the maps when omitted (pass it explicitly when the maps are traced
+    under jit) — and `extend` budgets the extra displacement of
+    downstream-halo-ring evaluation, where out-of-image lookups clamp to
+    the map edge so displacement grows 1:1 with the overhang."""
+    mx = jnp.asarray(map_x, jnp.float32)
+    my = jnp.asarray(map_y, jnp.float32)
+    if mx.ndim != 2 or mx.shape != my.shape:
+        raise ValueError(f"remap_stage: map planes must share one (H, W) "
+                         f"shape, got {mx.shape} and {my.shape}")
+    if bound is None:
+        if isinstance(mx, jax.core.Tracer) or isinstance(my, jax.core.Tracer):
+            raise ValueError("remap_stage: map planes are traced (under jit), "
+                             "so the displacement bound cannot be derived "
+                             "from them — pass bound=(rows, cols) explicitly")
+        mxn, myn = np.asarray(mx), np.asarray(my)
+        hm, wm = myn.shape
+        bound = (float(np.max(np.abs(myn - np.arange(hm)[:, None]))),
+                 float(np.max(np.abs(mxn - np.arange(wm)[None, :]))))
+    static = (float(bound[0]), float(bound[1]),
+              float(extend[0]), float(extend[1]))
+    return Stage("remap", static=static, weights=(mx, my), tap=tap)
+
+
+def pyr_up_stage() -> Stage:
+    """OpenCV pyrUp: 2x zero-insert upsample convolved with the 5-tap
+    [1,4,6,4,1]/16 Gaussian x4 — per axis the even phase is [1,6,1]/8 and
+    the odd phase [4,4]/8; out = 2*size exactly.
+
+    The first fractional-stride stage: `_out_hw` doubles and the compiler
+    *inverts* the window recurrence (R_in = ceil(R_out/2) + 2*halo),
+    interleaving the even/odd output phases in VMEM.  Map-only (upsampled
+    taps would make the band state mixed-resolution mid-chain)."""
+    return Stage("pyr_up")
+
+
 def chain_halo(stages) -> tuple[int, int]:
     """Accumulated (row, col) halo of the whole chain, in input-resolution
-    units (each stage's halo scaled by the map strides before it)."""
+    units: each stage's halo scaled by the net resolution factor before it
+    (ceil of halo * downsample/upsample product — map strides grow a
+    downstream halo's input-resolution cost, upsamples shrink it)."""
     return chain_accumulated_halo(stages)
 
 
@@ -324,6 +446,103 @@ def _apply_resize2(band, wts, static, carrier, *, interp=False):
     r = x[..., 0:rows:2, :] + x[..., 1:rows:2, :]
     c = uintr.v_add(r, uintr.v_shift_cols(r, -1))
     return _pack(c[..., 0::2] * jnp.float32(0.25), carrier)
+
+
+def _apply_pyr_up(band, carrier, meta, *, interp=False):
+    """2x upsample: separable even/odd phases ([1,6,1]/8 and [4,4]/8)
+    interleaved in VMEM.  Row phases are sliced to the (phase, rows) window
+    the driver's inverted recurrence planned; columns keep full (doubled)
+    width with the wrap-contaminated edge lanes inside the column halo."""
+    p2, r_out = meta
+    x = _expand_once(band, interp)
+    rows = band.shape[-2]
+    a = x[..., 0:rows - 2, :]
+    b = x[..., 1:rows - 1, :]
+    c = x[..., 2:rows, :]
+    ev = (a + 6.0 * b + c) * jnp.float32(0.125)
+    od = (b + c) * jnp.float32(0.5)
+    t = jnp.stack([ev, od], axis=-2)
+    t = t.reshape(t.shape[:-3] + (2 * (rows - 2), t.shape[-1]))
+    t = t[..., p2:p2 + r_out, :]
+    if interp:
+        t = _materialize(t)     # both column phases consume every row
+    left, right = uintr.v_shift_cols(t, 1), uintr.v_shift_cols(t, -1)
+    evc = (left + 6.0 * t + right) * jnp.float32(0.125)
+    odc = (t + right) * jnp.float32(0.5)
+    u = jnp.stack([evc, odc], axis=-1)
+    u = u.reshape(u.shape[:-3] + (u.shape[-3], 2 * u.shape[-2]))
+    return _pack(u, carrier)
+
+
+def _bilinear_band(x, sy, sx, oy, ox, carrier, *, interp=False):
+    """Bilinear gather from an f32 band: sample the (..., R, W) band (whose
+    local origin sits at *image* coordinates (oy, ox); oy may be traced) at
+    image coordinates (sy, sx) of shape (r_out, W).
+
+    floor/frac are taken on the *global* coordinate (exact in f32 at image
+    scales), never on the window-local one — subtracting a different
+    integer origin in the kernel vs the oracle would round fy/fx apart by
+    an ulp and flip u8 .5 ties.  Taps are clamped into the band; the chain
+    compiler's bound validation guarantees the clamp never fires for any
+    output a later stage (or the final crop) consumes."""
+    rows, wp = x.shape[-2], x.shape[-1]
+    iy, ix = jnp.floor(sy), jnp.floor(sx)
+    fy, fx = sy - iy, sx - ix
+    ly = jnp.clip(iy.astype(jnp.int32) - oy, 0, rows - 2)
+    lx = jnp.clip(ix.astype(jnp.int32) - ox, 0, wp - 2)
+    if interp:
+        x = _materialize(x)     # four gather consumers
+    flat = x.reshape(x.shape[:-2] + (rows * wp,))
+
+    def take(dy, dx):
+        idx = (ly + dy) * wp + (lx + dx)
+        v = jnp.take(flat, idx.reshape(-1), axis=-1, mode="clip")
+        return v.reshape(x.shape[:-2] + idx.shape)
+
+    v00, v01 = take(0, 0), take(0, 1)
+    v10, v11 = take(1, 0), take(1, 1)
+    top = v00 + (v01 - v00) * fx
+    bot = v10 + (v11 - v10) * fx
+    return _pack(top + (bot - top) * fy, carrier)
+
+
+def _apply_warp(band, static, carrier, meta, band_i, *, interp=False):
+    """Inverse-map affine gather: src coords are affine in the output's
+    absolute image coordinates, recovered from the grid step (band_i) and
+    the compiler's static (row step, row offset, col origin) meta."""
+    m00, m01, m02, m10, m11, m12, by, bx = static
+    hy, hx = _gather_halo(by, bx)
+    mult, off, co = meta
+    oy = band_i * mult + off
+    out_rows = band.shape[-2] - 2 * hy
+    yy = (oy + hy + jnp.arange(out_rows, dtype=jnp.int32))[:, None]
+    xx = (co + jnp.arange(band.shape[-1], dtype=jnp.int32))[None, :]
+    yf, xf = yy.astype(jnp.float32), xx.astype(jnp.float32)
+    sx = xf * m00 + yf * m01 + m02
+    sy = xf * m10 + yf * m11 + m12
+    x = _expand_once(band, interp)
+    return _bilinear_band(x, sy, sx, oy, co, carrier, interp=interp)
+
+
+def _apply_remap(band, wts, static, carrier, meta, band_i, *, interp=False):
+    """Precomputed-map gather: the (H, W) map planes ride along as per-step
+    chain inputs; lookups at halo-ring (out-of-image) output coordinates
+    clamp to the map edge (replicate), which the stage's extend= budget
+    covers."""
+    map_x, map_y = wts
+    hm, wm = map_y.shape
+    by, bx, ey, ex = static
+    hy, hx = _gather_halo(by + ey, bx + ex)
+    mult, off, co = meta
+    oy = band_i * mult + off
+    out_rows = band.shape[-2] - 2 * hy
+    yy = (oy + hy + jnp.arange(out_rows, dtype=jnp.int32))[:, None]
+    xx = (co + jnp.arange(band.shape[-1], dtype=jnp.int32))[None, :]
+    idx = (jnp.clip(yy, 0, hm - 1) * wm + jnp.clip(xx, 0, wm - 1)).reshape(-1)
+    sy = jnp.take(map_y.reshape(-1), idx, mode="clip").reshape(out_rows, -1)
+    sx = jnp.take(map_x.reshape(-1), idx, mode="clip").reshape(out_rows, -1)
+    x = _expand_once(band, interp)
+    return _bilinear_band(x, sy, sx, oy, co, carrier, interp=interp)
 
 
 def _morph_identity(dtype, op):
@@ -446,14 +665,30 @@ def _crop_rows(band: Array, ph: int) -> Array:
 
 
 def _chain_kernel(x_ref, *refs, plan, carrier, interp, n_out):
-    """plan: per-stage (op, static, mode, tap_idx, (ph, pw)).  The band
-    state is a list; all bands share rows (the driver's backward recurrence
-    sizes the input window so every shape below is exact)."""
+    """plan: per-stage (op, static, mode, tap_idx, (ph, pw), meta).  The
+    band state is a list; all bands share rows (the driver's backward
+    recurrence sizes the input window so every shape below is exact).
+    `meta` is static per-stage geometry: (row step, row offset, col origin)
+    for gather stages — which, with the grid step, recovers the band's
+    absolute image coordinates — and (row phase, out rows) for pyr_up."""
     out_refs = refs[len(refs) - n_out:]
     w_refs = refs[:len(refs) - n_out]
     bands = [x_ref[...]]                 # (P, R_window, WP) carrier dtype
+    band_i = pl.program_id(1)
     wi = 0
-    for op, static, mode, tap, (ph, pw) in plan:
+
+    def apply(op, band, wts, static, dtype, meta):
+        if op == "warp_affine":
+            return _apply_warp(band, static, dtype, meta, band_i,
+                               interp=interp)
+        if op == "remap":
+            return _apply_remap(band, wts, static, dtype, meta, band_i,
+                                interp=interp)
+        if op == "pyr_up":
+            return _apply_pyr_up(band, dtype, meta, interp=interp)
+        return _APPLY[op](band, wts, static, dtype, interp=interp)
+
+    for op, static, mode, tap, (ph, pw), meta in plan:
         nw = _N_WEIGHTS[op]
         wts = tuple(w_refs[wi + t][...] for t in range(nw))
         wi += nw
@@ -464,8 +699,7 @@ def _chain_kernel(x_ref, *refs, plan, carrier, interp, n_out):
             out = _apply_grad_pair(bands[-2], bands[-1], carrier)
             bands = [_crop_rows(b, ph) for b in bands[:-2]] + [out]
         elif mode == "tap":              # apply to band `tap`, append result
-            new = _APPLY[op](bands[tap], wts, static, bands[tap].dtype,
-                             interp=interp)
+            new = apply(op, bands[tap], wts, static, bands[tap].dtype, meta)
             if interp:
                 # a tapped band has >1 consumer (the out store + later taps
                 # + per-stage crops); pin it or XLA-CPU loop fusion
@@ -473,8 +707,7 @@ def _chain_kernel(x_ref, *refs, plan, carrier, interp, n_out):
                 new = _materialize(new)
             bands = [_crop_rows(b, ph) for b in bands] + [new]
         else:                            # map over every band
-            bands = [_APPLY[op](b, wts, static, b.dtype, interp=interp)
-                     for b in bands]
+            bands = [apply(op, b, wts, static, b.dtype, meta) for b in bands]
     for out_ref, b in zip(out_refs, bands):
         out_ref[...] = b
 
@@ -519,7 +752,7 @@ def _band_meta(resolved, carrier):
     The source op is set for tapped bands so their output geometry rule
     (`_out_hw`) and stride divisor apply; map/reduce bands are full-res."""
     bands = [(carrier, None)]
-    for op, mode, halo, stride, n_in, n_out, tap in resolved:
+    for op, mode, halo, stride, up, n_in, n_out, tap in resolved:
         if mode == "emit":
             bands = bands[:-1] + [(jnp.float32, None), (jnp.float32, None)]
         elif mode == "reduce":
@@ -539,7 +772,9 @@ def _chain_planes(planes: Array, weights: tuple, spec: tuple,
     the batch/channel axis is the second register-block dimension, amortizing
     per-grid-step overhead the same way lmul widens the band.  Strided
     stages shrink the store-side geometry (out_specs per band); the input
-    window is sized by the backward recurrence R_in = R_out*stride + 2*halo."""
+    window is sized by an exact backward walk in *image coordinates*
+    (`iface` below), which subsumes R_in = R_out*stride + 2*halo and
+    inverts for upsamples (R_in = ceil(R_out/2) + taps for pyr_up)."""
     from repro.core.autotune import plane_block
 
     stages = _respec(spec, weights)
@@ -550,40 +785,126 @@ def _chain_planes(planes: Array, weights: tuple, spec: tuple,
     P = plane_block(stages, W, N, vc, in_dtype=planes.dtype)
     n_pad = (-N) % P
 
-    # forward geometry: final full-res image size + total map stride
+    # forward geometry: final full-res image size + net map scale (down/up)
     h_fin, w_fin = H, W
-    sy_map = sx_map = 1
-    for op, mode, halo, stride, _, _, _ in resolved:
+    ny = nx = uy = ux = 1
+    for op, mode, halo, stride, up, _, _, _ in resolved:
         if mode == "map":
             h_fin, w_fin = _out_hw(op, h_fin, w_fin)
-            sy_map *= stride[0]
-            sx_map *= stride[1]
+            ny, nx = ny * stride[0], nx * stride[1]
+            uy, ux = uy * up[0], ux * up[1]
+    if h_fin < 1 or w_fin < 1:
+        raise ValueError(f"fused_chain: chain output is empty for a "
+                         f"{(H, W)} input (strided stages consumed it)")
     bands = _band_meta(resolved, planes.dtype)
     # per-band stride divisor below the final state scale (terminal taps)
     divs = [_STRIDES.get(src_op, (1, 1)) for _, src_op in bands]
-    s_all_y = sy_map * max(d for d, _ in divs)
-    s_all_x = sx_map * max(d for _, d in divs)
-    if rows % s_all_y or vc.lane % s_all_x:
-        raise ValueError(f"chain stride product ({s_all_y}, {s_all_x}) must "
+    down_y = ny * max(d for d, _ in divs)
+    down_x = nx * max(d for _, d in divs)
+    if rows % down_y or vc.lane % down_x:
+        raise ValueError(f"chain stride product ({down_y}, {down_x}) must "
                          f"divide the band rows ({rows}) and lane ({vc.lane})")
 
-    # backward recurrence: input window rows for one band step of `rows`
-    r_window = rows
-    for op, mode, halo, stride, _, _, _ in reversed(resolved):
-        r_window = r_window * (stride[0] if mode == "map" else 1) + 2 * halo[0]
-    step_in = rows * sy_map
+    # backward row walk in image coordinates: iface[k] = (mult, off, r)
+    # means band i consumes image rows [i*mult + off, i*mult + off + r) at
+    # stage k's input resolution (iface[-1] is the final output band).
+    iface = [(rows, 0, rows)]
+    for op, mode, halo, stride, up, _, _, _ in reversed(resolved):
+        mult, off, r = iface[0]
+        h = halo[0]
+        if mode == "map" and up[0] > 1:
+            if mult % up[0]:
+                raise ValueError(
+                    f"chain upsample {op!r}: band step {mult} is not "
+                    f"divisible by {up[0]} (use a larger lmul or fewer "
+                    f"stacked upsamples)")
+            off2 = off // up[0] - h
+            end2 = (off + r - 1) // up[0] + h + 1
+            iface.insert(0, (mult // up[0], off2, end2 - off2))
+        elif mode == "map":
+            s = stride[0]
+            iface.insert(0, (mult * s, s * off - h, s * r + 2 * h))
+        else:
+            iface.insert(0, (mult, off - h, r + 2 * h))
+    mult0, off0, r_window = iface[0]
+    pad_top = -off0
     n_bands = max(1, -(-h_fin // rows))
-    t_rows = (n_bands - 1) * step_in + r_window
+    t_rows = (n_bands - 1) * mult0 + r_window
 
-    # column geometry: left pad divisible by the total stride product so
+    # column geometry: left pad divisible by the total downsample product so
     # in-kernel even-index decimation lands on even *image* coordinates
-    pw_l = pw_in + (-pw_in) % s_all_x
+    pw_l = pw_in + (-pw_in) % down_x
     wp = pw_l + W + pw_in
     wp += (-wp) % vc.lane
     x = jnp.pad(planes,
-                ((0, n_pad), (ph_in, max(0, t_rows - ph_in - H)),
+                ((0, n_pad), (pad_top, max(0, t_rows - pad_top - H)),
                  (pw_l, wp - pw_l - W)),
                 mode="edge")[:, :t_rows]
+
+    # (row, col) halo still needed *after* each stage, at its output
+    # resolution — the gather stages' evaluation rectangle: outputs beyond
+    # image + this ring are window slack that the final crop discards, so
+    # their (clamped) gathers need no displacement budget
+    needr = [0] * (len(resolved) + 1)
+    needc = [0] * (len(resolved) + 1)
+    for k in range(len(resolved) - 1, -1, -1):
+        op, mode, halo, stride, up, _, _, _ = resolved[k]
+        r, c = needr[k + 1], needc[k + 1]
+        if mode == "map":
+            r = -(-r // up[0]) * stride[0]
+            c = -(-c // up[1]) * stride[1]
+        needr[k] = halo[0] + r
+        needc[k] = halo[1] + c
+
+    # forward walk: per-stage static meta (gather coordinates, pyr_up
+    # phase) + displacement-bound validation against the actual fused
+    # window — a declared bound that undershoots the halo ring the later
+    # stages consume would silently clamp gathers, so it raises here.
+    metas = []
+    co = -pw_l                  # image col of local col 0 at current stage
+    h_cur, w_cur = H, W
+    for k, (op, mode, halo, stride, up, _, _, _) in enumerate(resolved):
+        mult_k, off_k, r_k = iface[k]
+        if op in _GATHER_OPS:
+            metas.append((mult_k, off_k, co))
+            hy, hx = halo
+            cya, cxa = needr[k + 1], needc[k + 1]
+            min_y = max(off_k + hy, -cya)
+            max_y = min((n_bands - 1) * mult_k + off_k + r_k - hy - 1,
+                        h_cur - 1 + cya)
+            min_x, max_x = -cxa, w_cur - 1 + cxa
+            st = stages[k].static
+            if op == "warp_affine":
+                m = (st[0:3], st[3:6])
+                req_y, req_x = _affine_disp_over(m, min_y, max_y, min_x, max_x)
+            else:
+                if stages[k].weights[1].shape != (h_cur, w_cur):
+                    raise ValueError(
+                        f"remap stage: map planes are "
+                        f"{stages[k].weights[1].shape}, but the image at "
+                        f"this stage is {(h_cur, w_cur)}")
+                req_y = st[0] + max(0, -min_y, max_y - (h_cur - 1))
+                req_x = st[1] + max(0, -min_x, max_x - (w_cur - 1))
+            req_hy, req_hx = _gather_halo(req_y, req_x)
+            if req_hy > hy or req_hx > hx:
+                raise ValueError(
+                    f"{op} stage: declared displacement bound gives halo "
+                    f"({hy}, {hx}) but the fused window evaluates outputs "
+                    f"over rows [{min_y}, {max_y}] x cols [{min_x}, "
+                    f"{max_x}], needing displacement ({req_y:.2f}, "
+                    f"{req_x:.2f}) — declare it via bound=/extend= "
+                    f"(downstream stages consume the halo ring)")
+        elif op == "pyr_up":
+            _, off_o, r_o = iface[k + 1]
+            metas.append((off_o - 2 * off_k - 2, r_o))
+        else:
+            metas.append(None)
+        if mode == "map":
+            h_cur, w_cur = _out_hw(op, h_cur, w_cur)
+            if stride[1] > 1:
+                co = co // stride[1]
+            elif up[1] > 1:
+                co = co * up[1]
 
     w_specs, w_args = [], []
     for s in stages:
@@ -591,26 +912,27 @@ def _chain_planes(planes: Array, weights: tuple, spec: tuple,
             w_specs.append(pl.BlockSpec(w.shape, lambda n, i, nd=w.ndim: (0,) * nd))
             w_args.append(w)
 
-    plan = tuple((s.op, s.static, mode, tap, halo)
-                 for s, (op, mode, halo, stride, n_in, n_out, tap)
-                 in zip(stages, resolved))
+    plan = tuple((s.op, s.static, mode, tap, halo, meta)
+                 for s, (op, mode, halo, stride, up, n_in, n_out, tap), meta
+                 in zip(stages, resolved, metas))
 
     out_specs, out_shapes, crops = [], [], []
+    wp_full = wp * ux // nx
     for (dtype, src_op), (dy, dx) in zip(bands, divs):
-        rows_k, wp_k = rows // dy, wp // (sx_map * dx)
+        rows_k, wp_k = rows // dy, wp_full // dx
         h_k, w_k = _out_hw(src_op, h_fin, w_fin)
         out_specs.append(pl.BlockSpec((P, rows_k, wp_k),
                                       lambda n, i: (n, i, 0)))
         out_shapes.append(jax.ShapeDtypeStruct(
             (N + n_pad, n_bands * rows_k, wp_k), dtype))
-        crops.append((h_k, w_k, pw_l // (sx_map * dx)))
+        crops.append((h_k, w_k, -co // dx))
 
     outs = pl.pallas_call(
         functools.partial(_chain_kernel, plan=plan, carrier=planes.dtype,
                           interp=vc.run_interpret, n_out=len(bands)),
         grid=((N + n_pad) // P, n_bands),
         in_specs=[pl.BlockSpec((P, r_window, wp),
-                               lambda n, i: (n * P, i * step_in, 0),
+                               lambda n, i: (n * P, i * mult0, 0),
                                indexing_mode=pl.Unblocked())] + w_specs,
         out_specs=out_specs,
         out_shape=out_shapes,
@@ -651,10 +973,23 @@ def fused_chain(img: Array, stages, *, vc: VectorConfig | None = None):
     tuple of arrays (one per band — e.g. a Gaussian ladder's scales plus a
     pyrDown next-octave base, or a Sobel dx/dy pair), each with the
     geometry its band's stride history implies.
+
+    Planes smaller than the chain's accumulated halo fall back to the
+    `ref.chain_ref` oracle (identical semantics, no Pallas launch): the
+    fused window would be mostly replicated padding, so there is no VMEM
+    traffic to save — and the guard keeps the window planner out of the
+    degenerate pad-dominated regime entirely.
     """
     stages = tuple(stages)
     if not stages:
         return img
+    if img.ndim not in (2, 3, 4):
+        raise ValueError(f"fused_chain: unsupported rank {img.ndim}")
+    ph_in, pw_in = chain_accumulated_halo(stages)
+    h_in, w_in = ((img.shape[-2], img.shape[-1]) if img.ndim == 2
+                  else (img.shape[-3], img.shape[-2]))
+    if h_in <= ph_in or w_in <= pw_in:
+        return ref.chain_ref(img, stages)
     if vc is None:
         from repro.core.autotune import pick_chain_lmul
         vc = pick_chain_lmul(stages, img.shape[-2] if img.ndim > 2 else img.shape[-1],
@@ -671,12 +1006,10 @@ def fused_chain(img: Array, stages, *, vc: VectorConfig | None = None):
         planes = jnp.moveaxis(img, -1, 0)
         outs = _chain_planes(planes, weights, spec, vc)
         outs = tuple(jnp.moveaxis(o, 0, -1) for o in outs)
-    elif img.ndim == 4:                    # (B, H, W, C) -> planes (B*C, H, W)
+    else:                                  # (B, H, W, C) -> planes (B*C, H, W)
         B, H, W, C = img.shape
         planes = jnp.moveaxis(img, -1, 1).reshape(B * C, H, W)
         outs = _chain_planes(planes, weights, spec, vc)
         outs = tuple(jnp.moveaxis(o.reshape(B, C, *o.shape[1:]), 1, -1)
                      for o in outs)
-    else:
-        raise ValueError(f"fused_chain: unsupported rank {img.ndim}")
     return outs[0] if len(outs) == 1 else outs

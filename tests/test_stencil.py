@@ -447,6 +447,278 @@ def test_chain_working_set_counts_bands():
                 > chain_working_set(base, w).bytes(VectorConfig(lmul=4)))
 
 
+# ---------------------------------------------------------------------------
+# gather stages (warp_affine / remap) + pyr_up: goldens vs ref.chain_ref
+# ---------------------------------------------------------------------------
+
+def _rot_M(theta=0.05, tx=3.0, ty=-2.0):
+    """Small dst->src rotation + translation (inverse-map convention)."""
+    c, s = np.cos(theta), np.sin(theta)
+    return np.array([[c, -s, tx], [s, c, ty]])
+
+
+def _jit_ref(img, chain):
+    """chain_ref under jit: the gather stages' sample coordinates must be
+    computed by the same XLA program kind as the fused kernel, or eager
+    rounding of (x*m00 + y*m01 + m02) can differ by an ulp and move a
+    bilinear tap (amplified by the local image gradient)."""
+    out = jax.jit(lambda x: ref.chain_ref(x, chain))(img)
+    return out if isinstance(out, tuple) else (out,)
+
+
+def _assert_chain_exact(img, chain, lmul=1):
+    """Fused output is bit-identical to the jitted oracle (all dtypes)."""
+    out = stencil.fused_chain(img, chain, vc=VectorConfig(lmul=lmul))
+    outs = out if isinstance(out, tuple) else (out,)
+    wants = _jit_ref(img, chain)
+    assert len(outs) == len(wants)
+    for o, w in zip(outs, wants):
+        assert o.shape == w.shape and o.dtype == w.dtype
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(w))
+
+
+@pytest.mark.parametrize("lmul", LMULS)
+@pytest.mark.parametrize("dtype", DTYPES3)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_warp_affine_golden(rng, shape, dtype, lmul):
+    """Gather stage vs chain_ref: bit-identical on every carrier, batched
+    and multichannel (replicate border, bilinear taps)."""
+    img = _image3(rng, shape, dtype)
+    hw = shape if len(shape) == 2 else shape[-3:-1]
+    _assert_chain_exact(img, (stencil.warp_affine_stage(_rot_M(), shape=hw),),
+                        lmul)
+
+
+def test_warp_affine_identity_is_input(rng):
+    """Independent pin (not chain_ref): the identity matrix warps every
+    pixel to itself — integer sample coordinates, so bilinear returns the
+    input exactly."""
+    img = _image3(rng, (37, 61), jnp.uint8)
+    eye = np.array([[1.0, 0.0, 0.0], [0.0, 1.0, 0.0]])
+    out = stencil.fused_chain(img, (stencil.warp_affine_stage(eye, shape=(37, 61)),),
+                              vc=VectorConfig(lmul=1))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(img))
+
+
+def test_warp_affine_translate_pin(rng):
+    """Integer dst->src translation == a shifted copy with replicate edges."""
+    img = _image3(rng, (33, 49), jnp.uint8)
+    m = np.array([[1.0, 0.0, 3.0], [0.0, 1.0, -2.0]])   # src = dst + (3, -2)
+    out = stencil.fused_chain(img, (stencil.warp_affine_stage(m, shape=(33, 49)),),
+                              vc=VectorConfig(lmul=1))
+    x = np.asarray(img)
+    want = np.pad(x, ((2, 0), (0, 3)), mode="edge")[:33, 3:]
+    np.testing.assert_array_equal(np.asarray(out), want)
+
+
+@pytest.mark.parametrize("dtype", DTYPES3)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_remap_golden(rng, shape, dtype):
+    """Precomputed-map gather vs chain_ref: the (H, W) map planes enter as
+    extra chain inputs; bound auto-computed from the maps."""
+    img = _image3(rng, shape, dtype)
+    h, w = (shape[-3], shape[-2]) if len(shape) > 2 else shape
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float32)
+    map_y = yy + 1.5 * np.sin(xx / 7.0)
+    map_x = xx + 1.2 * np.cos(yy / 5.0)
+    _assert_chain_exact(img, (stencil.remap_stage(map_x, map_y),), 1)
+
+
+def test_remap_identity_is_input(rng):
+    img = _image3(rng, (40, 56), jnp.float32)
+    yy, xx = np.mgrid[0:40, 0:56].astype(np.float32)
+    out = stencil.fused_chain(img, (stencil.remap_stage(xx, yy),),
+                              vc=VectorConfig(lmul=4))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(img))
+
+
+def test_gather_midchain_golden(rng):
+    """Gather stages compose with stencil stages on both sides; u8 stays
+    bit-exact (the ulp-tie hazard is fenced by global-coordinate frac)."""
+    img = _image3(rng, (2, 37, 61, 2), jnp.uint8)
+    h, w = 37, 61
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float32)
+    chain = (stencil.remap_stage(xx + np.cos(yy / 3.0), yy + np.sin(xx / 4.0),
+                                 extend=(1, 1)),
+             stencil.erode_stage(1))
+    _assert_chain_exact(img, chain, 1)
+    chain2 = (stencil.gaussian_stage(3),
+              stencil.warp_affine_stage(_rot_M(0.03), shape=(h, w)),)
+    _assert_chain_exact(img, chain2, 4)
+
+
+def test_warp_ladder_chain_golden(rng):
+    """The align_and_detect shape: warp -> incremental Gaussian tap ladder,
+    bound extended by the ladder halo.  u8 bit-exact; f32 within the
+    standard chain tolerance (coordinate-ulp x local gradient)."""
+    ladder = (stencil.gaussian_stage(5, 1.6),
+              stencil.gaussian_stage(5, 1.2, tap=-1),
+              stencil.gaussian_stage(5, 1.4, tap=-1))
+    ey, ex = stencil.chain_halo(ladder)
+    chain = (stencil.warp_affine_stage(_rot_M(), shape=(37, 61),
+                                       extend=(ey, ex)),) + ladder
+    _assert_chain_exact(_image3(rng, (37, 61), jnp.uint8), chain, 1)
+    imgf = _image3(rng, (37, 61), jnp.float32)
+    out = stencil.fused_chain(imgf, chain, vc=VectorConfig(lmul=4))
+    for o, w in zip(out, _jit_ref(imgf, chain)):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(w),
+                                   rtol=1e-5, atol=1e-3)
+
+
+def test_warp_bound_too_small_raises(rng):
+    """A declared displacement bound that undershoots the fused window's
+    halo-ring evaluation must raise, not silently clamp the gathers."""
+    img = _image3(rng, (37, 61), jnp.uint8)
+    with pytest.raises(ValueError, match="displacement"):
+        stencil.fused_chain(
+            img, (stencil.warp_affine_stage(_rot_M(), bound=(0.1, 0.1)),
+                  stencil.gaussian_stage(5)), vc=VectorConfig(lmul=1))
+
+
+def test_remap_needs_extend_for_downstream(rng):
+    """remap's auto-bound covers in-image lookups only: a downstream halo
+    consumer needs extend=, and the compiler enforces it."""
+    img = _image3(rng, (37, 61), jnp.uint8)
+    yy, xx = np.mgrid[0:37, 0:61].astype(np.float32)
+    chain = (stencil.remap_stage(xx, yy), stencil.erode_stage(2))
+    with pytest.raises(ValueError, match="displacement"):
+        stencil.fused_chain(img, chain, vc=VectorConfig(lmul=1))
+    ok = (stencil.remap_stage(xx, yy, extend=(2, 2)), stencil.erode_stage(2))
+    _assert_chain_exact(img, ok, 1)
+
+
+@pytest.mark.parametrize("lmul", LMULS)
+@pytest.mark.parametrize("dtype", DTYPES3)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_pyr_up_golden(rng, shape, dtype, lmul):
+    """The first fractional-stride stage: standalone (bit-exact) and after
+    a blur (standard chain tolerance: the Gaussian's FMA-vs-sum f32 ulp)."""
+    img = _image3(rng, shape, dtype)
+    _assert_chain_exact(img, (stencil.pyr_up_stage(),), lmul)
+    _assert_chain(img, (stencil.gaussian_stage(3), stencil.pyr_up_stage()),
+                  dtype, lmul)
+
+
+def test_pyr_up_matches_zero_insert_conv(rng):
+    """Independent pin (not chain_ref): pyrUp == zero-insert upsample
+    convolved with 4x the 5-tap pyramid kernel (OpenCV definition),
+    replicate-extended at the source resolution."""
+    img = _image3(rng, (19, 31), jnp.float32)
+    out = stencil.fused_chain(img, (stencil.pyr_up_stage(),),
+                              vc=VectorConfig(lmul=1))
+    x = np.asarray(img, np.float64)
+    xp = np.pad(x, 2, mode="edge")                      # source-res replicate
+    up = np.zeros((2 * xp.shape[0], 2 * xp.shape[1]))
+    up[0::2, 0::2] = xp
+    k1 = np.array([1.0, 4.0, 6.0, 4.0, 1.0]) / 16.0
+    k = 4.0 * np.outer(k1, k1)
+    conv = np.zeros_like(up)
+    upp = np.pad(up, 2)
+    for i in range(5):
+        for j in range(5):
+            conv += k[i, j] * upp[i:i + up.shape[0], j:j + up.shape[1]]
+    want = conv[4:4 + 38, 4:4 + 62]                     # drop the pad ring
+    assert out.shape == (38, 62)
+    np.testing.assert_allclose(np.asarray(out, np.float64), want,
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_pyr_up_down_roundtrip(rng):
+    """pyrUp o pyrDown restores the original geometry (even dims) and, on a
+    smooth image, the original values to low error — fused as one chain AND
+    as two single-op launches (same result)."""
+    yy, xx = np.mgrid[0:48, 0:64].astype(np.float32)
+    smooth = jnp.asarray(100.0 + 50.0 * np.sin(xx / 9.0) * np.cos(yy / 11.0))
+    chain = (stencil.pyr_down_stage(), stencil.pyr_up_stage())
+    out = stencil.fused_chain(smooth, chain, vc=VectorConfig(lmul=1))
+    assert out.shape == (48, 64)
+    _assert_chain_exact(smooth, chain, 1)
+    staged = ops.pyr_up(ops.pyr_down(smooth, vc=VectorConfig(lmul=1)),
+                        vc=VectorConfig(lmul=1))
+    # interior: fused differs from staged only in the halo ring
+    np.testing.assert_allclose(np.asarray(out)[4:-4, 4:-4],
+                               np.asarray(staged)[4:-4, 4:-4], rtol=1e-6)
+    err = np.max(np.abs(np.asarray(out)[4:-4, 4:-4]
+                        - np.asarray(smooth)[4:-4, 4:-4]))
+    assert err < 2.0        # smooth signal survives the down/up round trip
+
+
+def test_pyr_up_rejects_tap(rng):
+    with pytest.raises(ValueError, match="tap"):
+        ref.chain_ref(_image3(rng, (32, 32), jnp.uint8),
+                      (stencil.Stage("pyr_up", tap=0),))
+    with pytest.raises(ValueError, match="tap"):
+        stencil.fused_chain(_image3(rng, (32, 32), jnp.uint8),
+                            (stencil.gaussian_stage(3),
+                             stencil.Stage("pyr_up", tap=0)),
+                            vc=VectorConfig(lmul=1))
+
+
+def test_warp_ladder_is_one_pallas_call(rng):
+    """Acceptance: the warp -> Gaussian ladder chain lowers to exactly ONE
+    pallas_call (the geometric transform no longer breaks the fusion)."""
+    ladder = (stencil.gaussian_stage(5, 1.6),
+              stencil.gaussian_stage(5, 1.2, tap=-1),
+              stencil.gaussian_stage(5, 1.4, tap=-1))
+    ey, ex = stencil.chain_halo(ladder)
+    chain = (stencil.warp_affine_stage(_rot_M(), shape=(64, 96),
+                                       extend=(ey, ex)),) + ladder
+    img = _image3(rng, (64, 96), jnp.float32)
+    vc = VectorConfig(lmul=4)
+    n = stencil.count_pallas_calls(
+        lambda x: stencil.fused_chain(x, chain, vc=vc), img)
+    assert n == 1
+    stencil.reset_launch_counter()
+    stencil.fused_chain(img, chain, vc=vc)
+    assert stencil.launch_count() == 1
+
+
+def test_small_plane_falls_back_to_ref(rng):
+    """Planes smaller than the accumulated halo fall back to chain_ref
+    (identical semantics, zero Pallas launches) instead of running a
+    pad-dominated fused window."""
+    chain = (stencil.gaussian_stage(7, 1.6),
+             stencil.gaussian_stage(7, 1.9, tap=-1),
+             stencil.gaussian_stage(7, 2.3, tap=-1),
+             stencil.pyr_down_stage(tap=2))      # accumulated halo 11 > 8
+    ph, pw = stencil.chain_halo(chain)
+    img = _image3(rng, (8, 8), jnp.uint8)
+    assert img.shape[0] <= ph and img.shape[1] <= pw
+    stencil.reset_launch_counter()
+    n = stencil.count_pallas_calls(
+        lambda x: stencil.fused_chain(x, chain, vc=VectorConfig(lmul=1))[0], img)
+    outs = stencil.fused_chain(img, chain, vc=VectorConfig(lmul=1))
+    assert n == 0 and stencil.launch_count() == 0
+    wants = ref.chain_ref(img, chain)
+    for o, w in zip(outs, wants):
+        assert o.shape == w.shape and o.dtype == w.dtype
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(w))
+    # batched small planes take the same fallback
+    imgb = _image3(rng, (2, 8, 8, 3), jnp.uint8)
+    outs_b = stencil.fused_chain(imgb, chain, vc=VectorConfig(lmul=1))
+    wants_b = ref.chain_ref(imgb, chain)
+    for o, w in zip(outs_b, wants_b):
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(w))
+
+
+def test_gather_and_pyr_up_working_set():
+    """Autotune accounting: remap charges its two full-size f32 map planes;
+    pyr_up charges the doubled output width."""
+    yy, xx = np.mgrid[0:256, 0:512].astype(np.float32)
+    base = (stencil.gaussian_stage(5),)
+    rm = (stencil.remap_stage(xx, yy),)
+    up = (stencil.pyr_up_stage(),)
+    vc = VectorConfig(lmul=4)
+    ws_base = chain_working_set(base, 512).bytes(vc)
+    ws_rm = chain_working_set(rm, 512).bytes(vc)
+    assert ws_rm - ws_base >= 2 * 256 * 512 * 4      # the two map planes
+    assert (chain_working_set(up, 512).bytes(vc)
+            > chain_working_set((stencil.gaussian_stage(3),), 512).bytes(vc))
+    # the lmul rule stays monotone through the new kinds
+    for w in (1920, 3840):
+        assert pick_chain_lmul(up, w).lmul <= pick_chain_lmul(base, w).lmul
+
+
 def test_count_pallas_calls_compat():
     """count_pallas_calls walks jaxprs via core.compat (jax.extend.core on
     new jax, jax.core fallback) — and sees through nested jits."""
