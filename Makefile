@@ -1,16 +1,26 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test bench-quick bench pipeline-bench
+.PHONY: test bench-quick bench pipeline-bench perf-gate autotune-cache
+
+# MODE=streaming|window|both selects the fused-chain execution plan(s)
+# the pipeline benches time (default both; see kernels/stencil.py modes)
+MODE ?= both
 
 test:            ## tier-1 verify
 	python -m pytest -x -q
 
 bench-quick:     ## quick benchmark pass (writes BENCH_results.json)
-	python -m benchmarks.run --quick
+	python -m benchmarks.run --quick --mode $(MODE)
 
 bench:           ## full benchmark pass
-	python -m benchmarks.run
+	python -m benchmarks.run --mode $(MODE)
 
 pipeline-bench:  ## fused-vs-staged acceptance benchmark only
-	python -m benchmarks.pipeline_bench
+	python -m benchmarks.pipeline_bench --mode=$(MODE)
+
+perf-gate:       ## fail on perf regressions vs BENCH_results.json history
+	python -m benchmarks.perf_gate
+
+autotune-cache:  ## inspect the measured chain-mode cache
+	python -m repro.core.autotune --show-cache

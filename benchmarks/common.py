@@ -45,14 +45,86 @@ def time_stats(fn, *args, n: int = 5, warmup: int = 1):
 
 # ---------------------------------------------------------------------------
 # Cross-PR perf trajectory: every bench records entries here; flush_results()
-# merges them into BENCH_results.json at the repo root.
+# merges them into BENCH_results.json at the repo root.  The latest run's
+# fields stay at the top level (tooling reads them directly); every run is
+# ALSO appended to a `history` list keyed by git SHA + date, so the
+# trajectory survives reruns (it used to be overwritten) and the CI perf
+# gate (benchmarks/perf_gate.py) can diff against the previous entry.
 # ---------------------------------------------------------------------------
 
 _RESULTS: dict = {}
 
+HISTORY_CAP = 50           # keep the last N runs
+
 
 def record_result(bench: str, entry) -> None:
     _RESULTS.setdefault(bench, []).append(entry)
+
+
+def git_sha() -> str:
+    try:
+        import subprocess
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            text=True, stderr=subprocess.DEVNULL).strip()
+    except Exception:
+        return "unknown"
+
+
+# fields that identify "the same measurement" across runs (shapes differ
+# between --quick and full passes, and a MODE=window run's fused_speedup is
+# a different measurement than a both-plan run's; only like-for-like rows
+# are compared — so a deliberate window-only pass can never trip the
+# regression gate against a both-mode entry, or mask one).  `modes_timed`
+# is the *requested* knob, not the measured winner: keying on the winner
+# would change the row identity exactly when a plan regresses enough to
+# flip it, blinding the gate at the worst moment.
+ROW_KEYS = ("batch", "image", "resolution", "chain", "kernel", "size",
+            "case", "dtype", "n_scales", "modes_timed")
+
+
+def row_key(row: dict) -> tuple:
+    return tuple((k, row[k]) for k in ROW_KEYS if k in row)
+
+
+def match_row(rows, key):
+    for r in rows or []:
+        if row_key(r) == key:
+            return r
+    return None
+
+
+def print_delta(data: dict) -> None:
+    """Delta of every fused_speedup-style metric vs the previous history
+    entry that measured the same row (bench + shape)."""
+    hist = data.get("history", [])
+    if len(hist) < 2:
+        print("\n(perf delta: no previous history entry to diff against)")
+        return
+    cur = hist[-1]
+    print(f"\n### Perf delta vs previous run "
+          f"({hist[-2]['sha']} {hist[-2]['date']})\n")
+    any_row = False
+    for bench, rows in sorted(cur.get("results", {}).items()):
+        for row in rows:
+            key = row_key(row)
+            prev_row = None
+            for entry in reversed(hist[:-1]):
+                prev_row = match_row(entry.get("results", {}).get(bench), key)
+                if prev_row:
+                    break
+            if not prev_row:
+                continue
+            for metric in ("fused_speedup", "fused_best_s"):
+                if metric in row and metric in prev_row:
+                    a, b = prev_row[metric], row[metric]
+                    arrow = "+" if b >= a else "-"
+                    print(f"  {bench} {dict(key)}: {metric} "
+                          f"{a} -> {b} ({arrow})")
+                    any_row = True
+                    break
+    if not any_row:
+        print("  (no matching rows in history)")
 
 
 def flush_results(path: str = RESULTS_PATH) -> str | None:
@@ -68,6 +140,11 @@ def flush_results(path: str = RESULTS_PATH) -> str | None:
     data.update(_RESULTS)
     data["_meta"] = {"written_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
                      "backend": jax.default_backend()}
+    entry = {"sha": git_sha(),
+             "date": time.strftime("%Y-%m-%dT%H:%M:%S"),
+             "backend": jax.default_backend(),
+             "results": dict(_RESULTS)}
+    data["history"] = (data.get("history", []) + [entry])[-HISTORY_CAP:]
     with open(path, "w") as f:
         json.dump(data, f, indent=1, default=float)
     return path

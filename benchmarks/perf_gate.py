@@ -1,0 +1,98 @@
+"""CI perf gate: `python -m benchmarks.perf_gate` exits non-zero when the
+recorded perf trajectory regresses.
+
+Three rules (ISSUE 4 satellite):
+
+  1. Absolute floor — the acceptance chain (gauss -> erode -> thresh) must
+     keep ``fused_speedup >= 1.2`` vs the staged per-op path.
+  2. Streaming beats window — the deep-ladder rows (octave, warp) must
+     show the streaming plan no slower than the overlapping-window plan
+     (the tentpole claim; holds by ~1.7-3x at every shape, so this rule
+     fires on CI --quick runs too, where rule 3 has no same-shape
+     history to compare against).
+  3. No regression — the octave and warp fused-vs-staged speedups must not
+     drop below the value recorded in the *previous* `history` entry that
+     measured the same row (bench + shape + requested mode knob; --quick
+     and full rows are never compared against each other).  A 15%
+     relative tolerance absorbs CI-runner wall-clock noise.
+
+Reads BENCH_results.json at the repo root (written by `make bench-quick` /
+`benchmarks/run.py`, which appends every run to `history` keyed by git
+SHA + date).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from .common import RESULTS_PATH, match_row, row_key
+
+MIN_PIPELINE_SPEEDUP = 1.2
+REGRESSION_TOLERANCE = 0.85      # current >= 0.85 * previous
+STREAM_VS_WINDOW_TOLERANCE = 1.1  # streaming <= 1.1 * window on ladders
+
+
+def check(data: dict) -> list[str]:
+    fails = []
+    for row in data.get("pipeline", []):
+        sp = row.get("fused_speedup")
+        if sp is not None and sp < MIN_PIPELINE_SPEEDUP:
+            fails.append(f"pipeline {row.get('batch')}: fused_speedup {sp} "
+                         f"< {MIN_PIPELINE_SPEEDUP} floor")
+
+    for bench in ("octave", "warp"):
+        for row in data.get(bench, []):
+            ts = row.get("fused_streaming_s")
+            tw = row.get("fused_window_s")
+            if ts is not None and tw is not None \
+                    and ts > tw * STREAM_VS_WINDOW_TOLERANCE:
+                fails.append(
+                    f"{bench} {row.get('image')}: streaming plan "
+                    f"({ts}s) slower than the window plan ({tw}s) — the "
+                    f"row-carry rings are not paying off")
+
+    hist = data.get("history", [])
+    if len(hist) < 2:
+        return fails
+    for bench in ("octave", "warp"):
+        for row in data.get(bench, []):
+            sp = row.get("fused_speedup")
+            if sp is None:
+                continue
+            key = row_key(row)
+            prev = None
+            for entry in reversed(hist[:-1]):
+                prev = match_row(entry.get("results", {}).get(bench), key)
+                if prev and prev.get("fused_speedup") is not None:
+                    break
+                prev = None
+            if prev is None:
+                continue
+            floor = prev["fused_speedup"] * REGRESSION_TOLERANCE
+            if sp < floor:
+                fails.append(
+                    f"{bench} {dict(key)}: fused_speedup {sp} regressed "
+                    f"below {floor:.2f} (= {REGRESSION_TOLERANCE} x previous "
+                    f"{prev['fused_speedup']} @ {hist[-2].get('sha')})")
+    return fails
+
+
+def main() -> int:
+    try:
+        with open(RESULTS_PATH) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"perf_gate: cannot read {RESULTS_PATH}: {e}")
+        return 1
+    fails = check(data)
+    if fails:
+        print("perf_gate: FAIL")
+        for f_ in fails:
+            print(f"  - {f_}")
+        return 1
+    print("perf_gate: OK (acceptance floor + history regression checks)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

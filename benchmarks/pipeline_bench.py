@@ -9,13 +9,22 @@ Pallas kernels in interpret mode on this host, so the wall-clock ratio
 isolates exactly what fusion removes: launches, pad/crop traffic, and the
 per-stage HBM round trips.
 
-Acceptance: fused lowers to exactly one pallas_call and is >= 1.3x faster
-than staged; results land in BENCH_results.json.
+Every fused chain is timed in BOTH execution plans (MODE=both, the
+default): `window` (PR-1..3 overlapping-window recompute) and `streaming`
+(PR-4 row-carry rings), and `autotune.measure_chain` caches the winner so
+the library's auto mode routes the same chain to the measured-cheapest
+plan.  Acceptance: fused lowers to exactly one pallas_call in both plans,
+the 3-stage chain is >= 1.3x staged, and the deep ladders (octave, warp)
+are >= 1.0x staged under streaming (they lose ~3-5x under window: the
+recomputed halo grows with chain depth); results land in
+BENCH_results.json.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
 from repro.core.vector import VectorConfig
 from repro.data.synthetic import ImageStream
 from repro.kernels import ops, ref, stencil
@@ -24,6 +33,32 @@ from .common import (best_of, flush_results, print_table, record_result,
                      save_json, time_stats)
 
 BLUR_K, ERODE_R, THRESH = 5, 1, 100.0
+
+PALLAS_MODES = ("window", "streaming")
+
+
+def _modes(mode: str) -> tuple[str, ...]:
+    return PALLAS_MODES if mode == "both" else (mode,)
+
+
+def _time_modes(make_fn, arg, mode: str, n: int = 3) -> tuple[dict, dict]:
+    """Time the jitted fused callable per requested execution plan.
+
+    Returns ({mode: best_s}, row fields): `fused_best_s` is the best plan's
+    time and `fused_mode` the plan that achieved it — the same winner the
+    measured autotune cache routes auto-mode callers to."""
+    times = {}
+    for m in _modes(mode):
+        fn = jax.jit(make_fn(m))
+        times[m] = time_stats(fn, arg, n=n)
+    best_m = min(times, key=lambda m: times[m]["best_s"])
+    fields = {"fused_best_s": round(times[best_m]["best_s"], 4),
+              "fused_median_s": round(times[best_m]["median_s"], 4),
+              "fused_mode": best_m,       # measured winner (outcome)
+              "modes_timed": mode}        # requested knob (row identity)
+    for m, t in times.items():
+        fields[f"fused_{m}_s"] = round(t["best_s"], 4)
+    return times, fields
 
 
 def chain():
@@ -48,21 +83,28 @@ def staged_baseline(batch, vc):
     return jnp.stack(out)
 
 
-def fused(batch, vc):
-    return stencil.fused_chain(batch, chain(), vc=vc)
+def fused(batch, vc, mode=None):
+    return stencil.fused_chain(batch, chain(), vc=vc, mode=mode)
 
 
-def run(*, quick: bool = False):
+def run(*, quick: bool = False, mode: str = "both"):
     shape = (4, 256, 256, 3) if quick else (8, 512, 512, 3)
     B, H, W, C = shape
     stream = ImageStream()
     batch = jnp.stack([stream.image((H, W), channels=C, seed=b) for b in range(B)])
     vc = VectorConfig(lmul=4)
 
-    n_calls = stencil.count_pallas_calls(lambda x: fused(x, vc), batch)
-    assert n_calls == 1, f"fused chain lowered to {n_calls} pallas_calls, want 1"
+    # structural acceptance: ONE pallas_call in every pallas execution plan
+    for m in PALLAS_MODES:
+        n_calls = stencil.count_pallas_calls(
+            lambda x: fused(x, vc, mode=m), batch)
+        assert n_calls == 1, (f"fused chain ({m}) lowered to {n_calls} "
+                              "pallas_calls, want 1")
 
-    fused_out = fused(batch, vc)
+    fused_out = fused(batch, vc, mode="window")
+    stream_out = fused(batch, vc, mode="streaming")
+    assert (jnp.asarray(fused_out) == jnp.asarray(stream_out)).all(), \
+        "streaming diverges from the overlapping-window plan"
     staged_out = staged_baseline(batch, vc)
     # chain border semantics differ only inside the accumulated-halo ring
     ph, pw = stencil.chain_halo(chain())
@@ -70,9 +112,12 @@ def run(*, quick: bool = False):
         (fused_out[:, ph:-ph, pw:-pw] == staged_out[:, ph:-ph, pw:-pw]).all())
     assert interior_equal, "fused chain diverges from staged baseline interior"
 
-    t_fused = time_stats(lambda x: fused(x, vc), batch, n=3)
+    # warm + persist the measured-mode cache (auto callers route to this)
+    autotune.measure_chain(batch, chain(), vc=vc)
+    times, fields = _time_modes(
+        lambda m: (lambda x: fused(x, vc, mode=m)), batch, mode)
     t_staged = time_stats(lambda x: staged_baseline(x, vc), batch, n=3)
-    speedup = t_staged["best_s"] / t_fused["best_s"]
+    speedup = t_staged["best_s"] / fields["fused_best_s"]
 
     # the seed implementation (triple-BlockSpec band halo, full-band padding)
     # as a third rung: what the per-op path cost before this engine existed
@@ -85,14 +130,13 @@ def run(*, quick: bool = False):
     row = {
         "batch": "x".join(map(str, shape)), "dtype": "u8",
         "chain": f"gauss{BLUR_K} -> erode{ERODE_R} -> thresh",
-        "pallas_calls_fused": n_calls, "pallas_calls_staged": launches_staged,
-        "fused_best_s": round(t_fused["best_s"], 4),
-        "fused_median_s": round(t_fused["median_s"], 4),
+        "pallas_calls_fused": 1, "pallas_calls_staged": launches_staged,
+        **fields,
         "staged_best_s": round(t_staged["best_s"], 4),
         "staged_median_s": round(t_staged["median_s"], 4),
         "seed_staged_best_s": round(t_seed["best_s"], 4),
         "fused_speedup": round(speedup, 2),
-        "fused_speedup_vs_seed": round(t_seed["best_s"] / t_fused["best_s"], 2),
+        "fused_speedup_vs_seed": round(t_seed["best_s"] / fields["fused_best_s"], 2),
         "interior_bitexact": interior_equal,
     }
     print_table("Fused 3-stage pipeline vs staged (per-op, per-channel)",
@@ -108,7 +152,10 @@ def run(*, quick: bool = False):
 # Octave benchmark: the SIFT Gaussian ladder + next-octave pyrDown as ONE
 # fused launch (tap stages + terminal strided tap) vs the per-scale staged
 # path (one gaussian_blur launch per scale + one pyrDown, the old
-# detect_keypoints structure).
+# detect_keypoints structure).  The deep-ladder acceptance for the
+# streaming plan: the accumulated halo (~35 rows) made the window plan
+# recompute ~3x the rows per stage per step, so fused lost 5x to staged;
+# the carry rings remove exactly that term.
 # ---------------------------------------------------------------------------
 
 N_SCALES = 4
@@ -125,26 +172,41 @@ def staged_octave(g):
     return jnp.stack(pyr), base
 
 
-def run_octave(*, quick: bool = False):
+def _octave_chain():
+    # the SHARED product builder: the cache entry this warms is the exact
+    # chain signature gaussian_octave's auto mode looks up
+    from repro.cv.features import octave_chain
+    return octave_chain(N_SCALES, 1.6, 15)
+
+
+def run_octave(*, quick: bool = False, mode: str = "both"):
     from repro.cv import features
 
     H, W = (256, 256) if quick else (512, 512)
     stream = ImageStream()
     g = stream.image((H, W), channels=1, seed=0).astype(jnp.float32)
+    vc = VectorConfig(lmul=4)
 
-    fused = lambda x: features.gaussian_octave(x, n_scales=N_SCALES)
-    n_calls = stencil.count_pallas_calls(fused, g)
-    assert n_calls == 1, f"fused octave lowered to {n_calls} pallas_calls, want 1"
+    for m in PALLAS_MODES:
+        fused_m = lambda x, mm=m: features.gaussian_octave(
+            x, n_scales=N_SCALES, vc=vc, mode=mm)
+        n_calls = stencil.count_pallas_calls(fused_m, g)
+        assert n_calls == 1, (f"fused octave ({m}) lowered to {n_calls} "
+                              "pallas_calls, want 1")
 
-    t_fused = time_stats(fused, g, n=3)
+    autotune.measure_chain(g, _octave_chain(), vc=vc,
+                           modes=PALLAS_MODES)     # deep ladder: pallas plans
+    times, fields = _time_modes(
+        lambda m: (lambda x: features.gaussian_octave(
+            x, n_scales=N_SCALES, vc=vc, mode=m)), g, mode)
     t_staged = time_stats(staged_octave, g, n=3)
-    speedup = t_staged["best_s"] / t_fused["best_s"]
+    speedup = t_staged["best_s"] / fields["fused_best_s"]
     row = {
         "image": f"{H}x{W}", "dtype": "f32", "n_scales": N_SCALES,
         "bands": N_SCALES + 3,
-        "pallas_calls_fused": n_calls,
+        "pallas_calls_fused": 1,
         "pallas_calls_staged": N_SCALES + 3 + 1,
-        "fused_best_s": round(t_fused["best_s"], 4),
+        **fields,
         "staged_best_s": round(t_staged["best_s"], 4),
         "fused_speedup": round(speedup, 2),
     }
@@ -175,7 +237,7 @@ def staged_warp(g, M):
     return jnp.stack(pyr)
 
 
-def run_warp(*, quick: bool = False):
+def run_warp(*, quick: bool = False, mode: str = "both"):
     import numpy as np
 
     from repro.cv import features
@@ -185,28 +247,32 @@ def run_warp(*, quick: bool = False):
     g = stream.image((H, W), channels=1, seed=0).astype(jnp.float32)
     th = 0.05
     M = np.array([[np.cos(th), -np.sin(th), 4.0], [np.sin(th), np.cos(th), -3.0]])
+    vc = VectorConfig(lmul=4)
+    # the exact chain align_and_detect lowers (shared builder), so the
+    # launch-count gate measures the product path
+    chain = features.aligned_octave_chain(M, (H, W), n_scales=N_SCALES)
 
-    def fused(x):
-        # the exact chain align_and_detect lowers (shared builder), so the
-        # launch-count gate measures the product path
-        chain = features.aligned_octave_chain(M, (H, W), n_scales=N_SCALES)
-        return jnp.stack(stencil.fused_chain(
-            x, chain, vc=VectorConfig(lmul=4))[1:])
+    def make_fused(m):
+        return lambda x: jnp.stack(stencil.fused_chain(
+            x, chain, vc=vc, mode=m)[1:])
 
     # acceptance: the geometric transform no longer breaks the fusion —
-    # warp + the whole ladder is ONE pallas_call
-    n_calls = stencil.count_pallas_calls(fused, g)
-    assert n_calls == 1, f"warp chain lowered to {n_calls} pallas_calls, want 1"
+    # warp + the whole ladder is ONE pallas_call in both plans
+    for m in PALLAS_MODES:
+        n_calls = stencil.count_pallas_calls(make_fused(m), g)
+        assert n_calls == 1, (f"warp chain ({m}) lowered to {n_calls} "
+                              "pallas_calls, want 1")
 
-    t_fused = time_stats(fused, g, n=3)
+    autotune.measure_chain(g, chain, vc=vc, modes=PALLAS_MODES)
+    times, fields = _time_modes(make_fused, g, mode)
     t_staged = time_stats(lambda x: staged_warp(x, M), g, n=3)
-    speedup = t_staged["best_s"] / t_fused["best_s"]
+    speedup = t_staged["best_s"] / fields["fused_best_s"]
     row = {
         "image": f"{H}x{W}", "dtype": "f32", "n_scales": N_SCALES,
         "chain": "warp_affine -> gauss ladder",
-        "pallas_calls_fused": n_calls,
+        "pallas_calls_fused": 1,
         "pallas_calls_staged": 1 + N_SCALES + 3,
-        "fused_best_s": round(t_fused["best_s"], 4),
+        **fields,
         "staged_best_s": round(t_staged["best_s"], 4),
         "fused_speedup": round(speedup, 2),
     }
@@ -217,9 +283,72 @@ def run_warp(*, quick: bool = False):
     return [row]
 
 
+# ---------------------------------------------------------------------------
+# Small-kernel routing: the measured-timing fallback must route chains
+# whose fused launch LOSES on this backend (filter2d 3x3, erode size=3 —
+# the two regressions the window-mode bench recorded) to the cheapest
+# plan automatically, so the library never ships the slow plan.
+# ---------------------------------------------------------------------------
+
+
+def run_small_kernel_routing(*, quick: bool = False):
+    from .common import fusion_batch
+
+    stream = ImageStream()
+    batch = fusion_batch(stream)
+    vc = VectorConfig(lmul=4)
+    k1 = ref.gaussian_kernel1d(3)
+    cases = [
+        ("filter2d_3x3", (stencil.filter_stage(jnp.outer(k1, k1)),)),
+        ("erode_r3", (stencil.erode_stage(3),)),
+    ]
+    rows = []
+    for name, ch in cases:
+        res = autotune.measure_chain(batch, ch, vc=vc, n=1 if quick else 3)
+        # the routing contract is structural (wall-clock asserts flake on
+        # shared CI runners): the cache must hold the measured winner for
+        # exactly the key auto-mode callers look up, and the routed output
+        # must match the pallas plans bit-for-bit
+        routed = autotune.cached_chain_mode(ch, batch.shape, batch.dtype, vc)
+        assert routed == res["mode"], (
+            f"{name}: cache holds {routed!r}, measure_chain won "
+            f"{res['mode']!r} — auto mode would not route here")
+        auto_fn = jax.jit(lambda x, c=ch: stencil.fused_chain(x, c, vc=vc))
+        auto_out = auto_fn(batch)
+        want = stencil.fused_chain(batch, ch, vc=vc, mode="window")
+        # ref-plan u8 float accumulation may land a .5 tie one ulp apart
+        # from the pallas plans (repo-wide oracle tolerance)
+        diff = jnp.max(jnp.abs(jnp.asarray(auto_out, jnp.int32)
+                               - jnp.asarray(want, jnp.int32)))
+        assert int(diff) <= 1, \
+            f"{name}: routed plan diverges from the window plan ({diff})"
+        t_auto = time_stats(auto_fn, batch, n=1 if quick else 3)["best_s"]
+        t_best = min(res["times"].values())
+        if t_auto > 1.5 * t_best:     # informational: timing, not a gate
+            print(f"WARNING: {name} auto mode {t_auto:.4f}s vs measured "
+                  f"winner {res['mode']} {t_best:.4f}s")
+        row = {"case": name,
+               "batch": "x".join(map(str, batch.shape)),
+               "routed_mode": res["mode"],
+               **{f"{m}_s": round(t, 4) for m, t in res["times"].items()},
+               "auto_s": round(t_auto, 4)}
+        rows.append(row)
+        record_result("small_kernel_routing", row)
+    print_table("Measured-autotune routing (small kernels)",
+                list(rows[0].keys()), [list(r.values()) for r in rows])
+    save_json("small_kernel_routing", rows)
+    return rows
+
+
 if __name__ == "__main__":        # PYTHONPATH=src python -m benchmarks.pipeline_bench
-    import sys
-    run(quick="--quick" in sys.argv)
-    run_octave(quick="--quick" in sys.argv)
-    run_warp(quick="--quick" in sys.argv)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--mode", default="both",
+                    choices=["both", "streaming", "window"])
+    args = ap.parse_args()
+    run(quick=args.quick, mode=args.mode)
+    run_octave(quick=args.quick, mode=args.mode)
+    run_warp(quick=args.quick, mode=args.mode)
+    run_small_kernel_routing(quick=args.quick)
     flush_results()

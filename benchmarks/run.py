@@ -16,6 +16,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--mode", default="both",
+                    choices=["both", "streaming", "window"],
+                    help="fused-chain execution plan(s) to time "
+                         "(make bench-quick MODE=...)")
     ap.add_argument("--only", default=None,
                     choices=[None, "filter2d", "erode", "bow", "lmul", "pipeline",
                              "roofline"])
@@ -23,7 +27,7 @@ def main():
 
     from benchmarks import (bow_svm_bench, erode_bench, filter2d_bench,
                             lmul_bench, pipeline_bench)
-    from benchmarks.common import flush_results
+    from benchmarks.common import RESULTS_PATH, flush_results, print_delta
 
     if args.only in (None, "lmul"):
         lmul_bench.run(quick=args.quick)
@@ -32,13 +36,18 @@ def main():
     if args.only in (None, "erode"):
         erode_bench.run(quick=args.quick)
     if args.only in (None, "pipeline"):
-        pipeline_bench.run(quick=args.quick)
-        pipeline_bench.run_octave(quick=args.quick)
+        pipeline_bench.run(quick=args.quick, mode=args.mode)
+        pipeline_bench.run_octave(quick=args.quick, mode=args.mode)
+        pipeline_bench.run_warp(quick=args.quick, mode=args.mode)
+        pipeline_bench.run_small_kernel_routing(quick=args.quick)
     if args.only in (None, "bow"):
         bow_svm_bench.run(quick=args.quick)
     written = flush_results()
     if written:
         print(f"\nresults -> {written}")
+        import json
+        with open(RESULTS_PATH) as f:
+            print_delta(json.load(f))
     if args.only in (None, "roofline"):
         art = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
         if os.path.isdir(art) and os.listdir(art):

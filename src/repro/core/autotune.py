@@ -5,12 +5,24 @@ occupy 2x the registers and m8 is the ISA maximum. The TPU analogue:
 a kernel declares its working set as a function of the tile size (input
 tiles, widened accumulators, halos); we pick the largest lmul whose total
 fits the VMEM budget, with double-buffering headroom.
+
+This module is also the single source of truth for the fused chain's row
+geometry (`chain_iface`: the exact per-stage image-coordinate walk) and
+its *streaming carry plan* (`chain_stream_plan`: how many already-computed
+rows each stage carries across grid steps in VMEM scratch rings), plus the
+measured-timing fallback (`measure_chain`) that picks the cheapest of the
+{streaming, overlapping-window, chain_ref-staged} execution plans per
+(chain signature, shape, dtype, backend) and caches the winner.
 """
 from __future__ import annotations
 
+import json
+import os
+import time
 from dataclasses import dataclass
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 
 from .vector import VectorConfig
@@ -129,16 +141,94 @@ def chain_accumulated_halo(stages) -> tuple[int, int]:
     return ph, pw
 
 
-def chain_working_set(stages, width: int, in_dtype=jnp.uint8) -> WorkingSet:
+def chain_iface(plan, rows: int) -> list:
+    """Exact backward row walk in image coordinates (shared with
+    kernels/stencil.py): ``iface[k] = (mult, off, r)`` means grid step i
+    consumes image rows ``[i*mult + off, i*mult + off + r)`` at stage k's
+    input resolution; ``iface[-1]`` is the final output band of `rows`
+    rows.  Subsumes ``R_in = R_out*stride + 2*halo`` and inverts it for
+    upsamples (``R_in = ceil(R_out/up) + 2*halo``, phase-exact).
+    `plan` is a `resolve_chain` record list."""
+    iface = [(rows, 0, rows)]
+    for op, mode, halo, stride, up, _, _, _ in reversed(plan):
+        mult, off, r = iface[0]
+        h = halo[0]
+        if mode == "map" and up[0] > 1:
+            if mult % up[0]:
+                raise ValueError(
+                    f"chain upsample {op!r}: band step {mult} is not "
+                    f"divisible by {up[0]} (use a larger lmul or fewer "
+                    f"stacked upsamples)")
+            off2 = off // up[0] - h
+            end2 = (off + r - 1) // up[0] + h + 1
+            iface.insert(0, (mult // up[0], off2, end2 - off2))
+        elif mode == "map":
+            s = stride[0]
+            iface.insert(0, (mult * s, s * off - h, s * r + 2 * h))
+        else:
+            iface.insert(0, (mult, off - h, r + 2 * h))
+    return iface
+
+
+def chain_stream_plan(plan, iface) -> list:
+    """Streaming carry plan: per stage ``(sin_off, sin_r, ring_rows,
+    d_rows)``.
+
+    In streaming mode each grid step computes only the *new* rows of every
+    stage's output stream — the ``mult`` rows the step advances by — and
+    carries the halo overlap in a persistent VMEM scratch ring instead of
+    recomputing it from the enlarged window.  Stage k's body input per
+    step is the backward rule applied to its new-output window (the top
+    ``mult_out`` rows of ``iface[k+1]``): rows ``[i*mult_k + sin_off,
+    ... + sin_r)``, of which the stage's ring carries the first
+    ``ring_rows = sin_r - mult_k`` (= ``2*halo``; ``2*halo + 1`` for an
+    odd-phase upsample) and the upstream stage's current step supplies the
+    last ``mult_k``.  ``d_rows`` is the delay FIFO depth (= the stage
+    halo) that pass-through bands of a tap/emit stage carry so the whole
+    band state stays row-aligned."""
+    out = []
+    for k, (op, mode, halo, stride, up, n_in, n_out, tap) in enumerate(plan):
+        mult_k, off_k, r_k = iface[k]
+        mult_o, off_o, r_o = iface[k + 1]
+        top_o = off_o + r_o
+        h = halo[0]
+        if mode == "map" and up[0] > 1:
+            sin_off = (top_o - mult_o) // up[0] - h
+            sin_r = (top_o - 1) // up[0] + h + 1 - sin_off
+        elif mode == "map":
+            s = stride[0]
+            sin_off = s * (top_o - mult_o) - h
+            sin_r = s * mult_o + 2 * h
+        else:
+            sin_off = (top_o - mult_o) - h
+            sin_r = mult_o + 2 * h
+        ring_rows = sin_r - mult_k
+        if sin_off + sin_r != off_k + r_k or not 0 <= ring_rows <= r_k:
+            raise AssertionError(
+                f"chain_stream_plan: stage {k} ({op}) carry window "
+                f"[{sin_off}, {sin_off + sin_r}) misaligned with window "
+                f"interface [{off_k}, {off_k + r_k})")
+        out.append((sin_off, sin_r, ring_rows, h if mode != "map" else 0))
+    return out
+
+
+def chain_working_set(stages, width: int, in_dtype=jnp.uint8, *,
+                      streaming: bool = False) -> WorkingSet:
     """Working set of a fused stage chain — mirrors kernels/stencil.py.
 
-    Per grid step: one overlapping input window whose rows follow the
-    backward recurrence ``R_in = R_out * stride + 2*halo`` (so strided
+    Window (default) mode: one overlapping input window whose rows follow
+    the backward recurrence ``R_in = R_out * stride + 2*halo`` (so strided
     stages account for their pre-decimation geometry), then per stage its
     in-bands and out-bands (f32 for widening ops, carrier dtype otherwise)
     times the number of live bands — a tap ladder keeps every emitted band
     VMEM-resident, so working set grows with band count — plus the packed
-    output bands.  `stages` is duck-typed (``.op``/``.halo``; optional
+    output bands.
+
+    ``streaming=True`` charges the *carry-plan* footprint instead: the
+    same input window DMA, but each stage's body only holds its
+    ring-plus-new-rows buffer (`chain_stream_plan`) — strictly smaller for
+    deep chains, so `pick_chain_lmul` / `plane_block` can choose wider
+    blocks.  `stages` is duck-typed (``.op``/``.halo``; optional
     ``.stride``/``.tap``).
     """
     plan = resolve_chain(stages)
@@ -152,29 +242,37 @@ def chain_working_set(stages, width: int, in_dtype=jnp.uint8) -> WorkingSet:
 
     def fn(vc: VectorConfig) -> int:
         rows = vc.rows(in_dtype)
-        # backward recurrence: window rows at the chain input (upsampling
-        # stages invert it: R_in = ceil(R_out / up) + 2*halo)
-        r = rows
-        for op, mode, halo, stride, up, _, _, _ in reversed(plan):
-            if mode == "map":
-                r = -(-r // up[0]) * stride[0] + 2 * halo[0]
-            else:
-                r = r + 2 * halo[0]
+        iface = chain_iface(plan, rows)
+        sp = chain_stream_plan(plan, iface) if streaming else None
         wp = _round_lane(vc, width, pw_in)
-        total = r * wp * itemsize + w_bytes              # input window DMA
+        total = iface[0][2] * wp * itemsize + w_bytes    # input window DMA
         num, den = 1, 1                # net width scale so far (down / up)
         sizes = [itemsize]                 # live-band element sizes (bytes):
-        for op, mode, halo, stride, up, n_in, n_out, tap in plan:
-            sy, uy = (stride[0], up[0]) if mode == "map" else (1, 1)
-            out_r = ((r - 2 * halo[0]) // sy) * uy      # bands that stay
+        for k, (op, mode, halo, stride, up, n_in, n_out, tap) in enumerate(plan):
             wp_s = max(vc.lane, wp * den // num)        # f32 downstream
             widen = op in WIDENING_OPS
             n_part = n_in if mode == "map" else 1        # participating bands
-            # in-side: every live band is resident; each participating band
-            # of a widening op additionally holds a full f32 expansion
-            total += sum(r * wp_s * sz for sz in sizes)
+            if sp is None:
+                r_in = iface[k][2]
+                out_r = iface[k + 1][2]
+                # in-side: every live band is resident; each participating
+                # band of a widening op also holds a full f32 expansion
+                total += sum(r_in * wp_s * sz for sz in sizes)
+            else:
+                sin_off, r_in, ring_rows, d_rows = sp[k]
+                out_r = iface[k + 1][0]                  # new rows only
+                # body buffer + its scratch ring per participating band;
+                # pass-through bands hold their new rows + delay FIFO
+                if mode == "map":
+                    total += sum((r_in + ring_rows) * wp_s * sz
+                                 for sz in sizes)
+                else:
+                    psz = sizes[tap if mode == "tap" else -1]
+                    total += (r_in + ring_rows) * wp_s * psz
+                    total += sum((iface[k][0] + d_rows) * wp_s * sz
+                                 for sz in sizes)
             if widen:
-                total += n_part * r * wp_s * 4
+                total += n_part * r_in * wp_s * 4
             if mode == "emit":
                 sizes = sizes[:-1] + [4, 4]
             elif mode == "reduce":
@@ -189,7 +287,6 @@ def chain_working_set(stages, width: int, in_dtype=jnp.uint8) -> WorkingSet:
             if widen:
                 total += n_part * out_r * wp_out * 4
             total += sum(out_r * wp_out * sz for sz in sizes)
-            r = out_r
             if mode == "map":
                 num *= stride[1]
                 den *= up[1]
@@ -199,21 +296,23 @@ def chain_working_set(stages, width: int, in_dtype=jnp.uint8) -> WorkingSet:
 
 
 def pick_chain_lmul(stages, width: int, in_dtype=jnp.uint8, *,
-                    base: VectorConfig | None = None) -> VectorConfig:
+                    base: VectorConfig | None = None,
+                    streaming: bool = False) -> VectorConfig:
     """Chain-aware block-width selection: largest lmul whose accumulated-halo,
     widened working set fits VMEM (the paper's m8 ceiling, per chain)."""
-    return pick_lmul(chain_working_set(stages, width, in_dtype), base=base)
+    return pick_lmul(chain_working_set(stages, width, in_dtype,
+                                       streaming=streaming), base=base)
 
 
 def plane_block(stages, width: int, n_planes: int, vc: VectorConfig,
-                in_dtype=jnp.uint8) -> int:
+                in_dtype=jnp.uint8, *, streaming: bool = False) -> int:
     """Planes per grid step: the second register-block dimension.
 
     Batched/multi-channel inputs give the fused kernel an extra axis to
     amortize per-grid-step overhead over; pick the largest power-of-two
     plane count whose combined working set still fits the VMEM budget
     (same ceiling rule as the lmul knob)."""
-    ws = chain_working_set(stages, width, in_dtype)
+    ws = chain_working_set(stages, width, in_dtype, streaming=streaming)
     per_plane = ws.bytes(vc)
     p = 1
     while (p * 2 <= n_planes and (p * 2) * per_plane <= vc.vmem_budget):
@@ -230,3 +329,159 @@ def filter2d_working_set(width: int, ksize: int, in_dtype=jnp.uint8) -> WorkingS
 def erode_working_set(width: int, ksize: int, in_dtype=jnp.uint8) -> WorkingSet:
     """No widening: min/max closed over u8."""
     return chain_working_set((_StageShape("erode", (ksize, ksize)),), width, in_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Measured-timing fallback: pick the cheapest execution plan per chain.
+#
+# The model above sizes blocks; it cannot decide *which plan* wins on a
+# given backend (a 3x3 filter's fused launch can lose to the staged jnp
+# path on CPU interpret, while a deep ladder only wins streaming).
+# `measure_chain` times the {streaming, window, ref} candidates on the
+# real input and caches the winner per (chain signature, shape, dtype,
+# backend).  `fused_chain(mode=None)` consults the in-process cache; the
+# on-disk copy (REPRO_AUTOTUNE_CACHE, default ~/.cache/repro/) is written
+# for inspection (`python -m repro.core.autotune --show-cache`) and only
+# *read* back when REPRO_AUTOTUNE_CACHE_READ=1, so test runs stay
+# deterministic.
+# ---------------------------------------------------------------------------
+
+CHAIN_MODES = ("streaming", "window", "ref")
+
+_MODE_CACHE: dict[str, dict] = {}
+_DISK_CACHE_LOADED = False
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "chain_autotune.json"))
+
+
+def chain_signature(stages) -> str:
+    """Stable plan signature: op + static params + tap + weight *shapes*
+    (mode choice cannot depend on tap values)."""
+    parts = []
+    for s in stages:
+        wshapes = "/".join("x".join(map(str, w.shape))
+                           for w in getattr(s, "weights", ()))
+        parts.append(f"{s.op}{tuple(getattr(s, 'static', ()))}"
+                     f"t{getattr(s, 'tap', None)}w{wshapes}")
+    return "+".join(parts)
+
+
+def _vc_tag(vc: VectorConfig | None) -> str:
+    """Block geometry is part of a measurement's identity: plan ranking for
+    small chains is launch-overhead-dominated, i.e. lmul-sensitive."""
+    return ("auto" if vc is None
+            else f"m{vc.lmul}r{vc.base_rows}l{vc.lane}")
+
+
+def _cache_key(stages, shape, dtype, vc) -> str:
+    return (f"{chain_signature(stages)}|{'x'.join(map(str, shape))}"
+            f"|{jnp.dtype(dtype).name}|{_vc_tag(vc)}|{jax.default_backend()}")
+
+
+def _load_disk_cache() -> None:
+    global _DISK_CACHE_LOADED
+    _DISK_CACHE_LOADED = True
+    if os.environ.get("REPRO_AUTOTUNE_CACHE_READ") != "1":
+        return
+    try:
+        with open(cache_path()) as f:
+            for k, v in json.load(f).items():
+                _MODE_CACHE.setdefault(k, v)
+    except (OSError, json.JSONDecodeError):
+        pass
+
+
+def cached_chain_mode(stages, shape, dtype,
+                      vc: VectorConfig | None = None) -> str | None:
+    """The measured winner for this (chain, shape, dtype, vc, backend)."""
+    if not _DISK_CACHE_LOADED:
+        _load_disk_cache()
+    hit = _MODE_CACHE.get(_cache_key(stages, shape, dtype, vc))
+    return hit["mode"] if hit else None
+
+
+def clear_mode_cache() -> None:
+    _MODE_CACHE.clear()
+
+
+def measure_chain(img, stages, *, vc: VectorConfig | None = None,
+                  n: int = 3, modes=CHAIN_MODES, persist: bool = True) -> dict:
+    """Time the execution-plan candidates on a concrete input and cache the
+    winner: streaming (row-carry rings), window (overlapping-window
+    recompute) and ref (the staged `ref.chain_ref` jnp path — the cheapest
+    plan for small single-stage chains on CPU backends).  Returns
+    ``{"mode": winner, "times": {mode: best_s}}`` and records it so
+    `fused_chain(mode=None)` routes this chain automatically."""
+    from repro.kernels import stencil
+
+    stages = tuple(stages)
+    times, last_err = {}, None
+    for mode in modes:
+        fn = jax.jit(lambda x, m=mode: stencil.fused_chain(
+            x, stages, vc=vc, mode=m))
+        try:
+            jax.block_until_ready(fn(img))                   # compile + warm
+        except ValueError:
+            # deliberate chain validation (displacement-bound undershoot,
+            # stride/lmul divisibility): a misconfigured chain must raise,
+            # not silently route to the one plan that skips the check
+            raise
+        except Exception as e:
+            last_err = e              # candidate not lowerable here: skip it
+            continue
+        best = float("inf")
+        for _ in range(n):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(img))
+            best = min(best, time.perf_counter() - t0)
+        times[mode] = best
+    if not times:
+        raise RuntimeError("measure_chain: no candidate plan ran") from last_err
+    winner = min(times, key=times.get)
+    entry = {"mode": winner,
+             "times": {k: round(v, 6) for k, v in times.items()}}
+    key = _cache_key(stages, img.shape, img.dtype, vc)
+    _MODE_CACHE[key] = entry
+    if persist:
+        path = cache_path()
+        try:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            disk = {}
+            if os.path.exists(path):
+                with open(path) as f:
+                    disk = json.load(f)
+            disk[key] = entry
+            with open(path, "w") as f:
+                json.dump(disk, f, indent=1, sort_keys=True)
+        except (OSError, json.JSONDecodeError):
+            pass
+    return entry
+
+
+def _show_cache() -> None:
+    path = cache_path()
+    print(f"# chain-mode autotune cache: {path}")
+    disk = {}
+    try:
+        with open(path) as f:
+            disk = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        print("(no persisted cache)")
+    for k, v in sorted({**disk, **_MODE_CACHE}.items()):
+        times = "  ".join(f"{m}={t:.4g}s" for m, t in v["times"].items())
+        print(f"{k}\n  -> {v['mode']}   [{times}]")
+
+
+if __name__ == "__main__":          # python -m repro.core.autotune --show-cache
+    import argparse
+    ap = argparse.ArgumentParser(description="chain autotune cache tools")
+    ap.add_argument("--show-cache", action="store_true",
+                    help="print the measured chain-mode cache")
+    args = ap.parse_args()
+    if args.show_cache:
+        _show_cache()

@@ -52,10 +52,24 @@ def ladder_taps(n_scales: int, sigma0: float,
     return taps
 
 
+def octave_chain(n_scales: int = 4, sigma0: float = 1.6,
+                 max_ksize: int = 15, with_next_base: bool = True) -> tuple:
+    """The stage chain gaussian_octave lowers (shared with benchmarks so
+    the measured-autotune cache entry they warm is the product chain's
+    signature): base blur -> incremental tap ladder -> optional terminal
+    pyrDown tap emitting the next octave's base."""
+    taps = ladder_taps(n_scales, sigma0, max_ksize)
+    stages = [stencil.gaussian_stage(*taps[0])]
+    stages += [stencil.gaussian_stage(k, s, tap=-1) for k, s in taps[1:]]
+    if with_next_base:
+        stages.append(stencil.pyr_down_stage(tap=n_scales))
+    return tuple(stages)
+
+
 def gaussian_octave(img: Array, *, n_scales: int = 4, sigma0: float = 1.6,
                     max_ksize: int = 15, with_next_base: bool = True,
-                    vc: VectorConfig | None = None
-                    ) -> tuple[Array, Array | None]:
+                    vc: VectorConfig | None = None,
+                    mode: str | None = None) -> tuple[Array, Array | None]:
     """One SIFT octave — blur ladder (+ next-octave base) as ONE Pallas launch.
 
     img: (H, W) single plane (any carrier dtype; SIFT passes f32).
@@ -78,13 +92,12 @@ def gaussian_octave(img: Array, *, n_scales: int = 4, sigma0: float = 1.6,
 
     max_ksize caps the *base* blur only; the incremental taps are sized
     from their own sigma_delta at full width (see ladder_taps — a global
-    cap used to truncate the top-of-ladder taps and bias the DoG)."""
-    taps = ladder_taps(n_scales, sigma0, max_ksize)
-    stages = [stencil.gaussian_stage(*taps[0])]
-    stages += [stencil.gaussian_stage(k, s, tap=-1) for k, s in taps[1:]]
-    if with_next_base:
-        stages.append(stencil.pyr_down_stage(tap=n_scales))
-    outs = stencil.fused_chain(img, tuple(stages), vc=vc)
+    cap used to truncate the top-of-ladder taps and bias the DoG).
+    `mode` selects the chain execution plan (streaming row-carry by
+    default — the ladder is exactly the deep-chain shape the carry rings
+    were built for; see stencil.fused_chain)."""
+    stages = octave_chain(n_scales, sigma0, max_ksize, with_next_base)
+    outs = stencil.fused_chain(img, stages, vc=vc, mode=mode)
     if with_next_base:
         return jnp.stack(outs[:-1]), outs[-1]
     return jnp.stack(outs), None
@@ -200,7 +213,8 @@ def aligned_octave_chain(M, shape, *, n_scales: int = 4,
 
 def align_and_detect(img: Array, M, *, n_scales: int = 4, max_kp: int = 64,
                      contrast_thresh: float = 0.02, edge_thresh: float = 10.0,
-                     border: int = 8, vc: VectorConfig | None = None) -> dict:
+                     border: int = 8, vc: VectorConfig | None = None,
+                     mode: str | None = None) -> dict:
     """Warp -> Gaussian ladder -> DoG keypoints on the *aligned* image, with
     the geometric transform fused INTO the octave chain: the inverse-map
     affine enters as a gather stage whose displacement bound is extended by
@@ -215,7 +229,7 @@ def align_and_detect(img: Array, M, *, n_scales: int = 4, max_kp: int = 64,
     the detect_keypoints dict, with "gray" the warped image."""
     g = _normalize_gray(img)
     chain = aligned_octave_chain(M, g.shape, n_scales=n_scales)
-    outs = stencil.fused_chain(g, chain, vc=vc)
+    outs = stencil.fused_chain(g, chain, vc=vc, mode=mode)
     pyr = jnp.stack(outs[1:])                  # band 0 is the warped gray
     return _keypoints_from_pyr(pyr, outs[0], max_kp=max_kp,
                                contrast_thresh=contrast_thresh,

@@ -59,10 +59,33 @@ which the geometry planning below guarantees by making the pad offsets
 divisible by the total stride product. See EXPERIMENTS.md §Perf for the
 band/halo diagram and the stage table.
 
+Execution modes (`fused_chain(..., mode=)`):
+
+  * **streaming** (default when the chain has row halo) — the sequential
+    row-axis grid carries each live band's already-computed rows across
+    grid steps in persistent VMEM scratch rings (`pl.pallas_call`
+    `scratch_shapes`), so each step computes only the *new* `rows` output
+    rows per stage and reads the halo overlap from the ring instead of
+    recomputing it from the enlarged window.  Step 0 runs the window path
+    and primes the rings (gather stages therefore prime from the true
+    input window — their reads are data-dependent).  Redundant work no
+    longer scales with chain depth: this is what makes deep ladders
+    (SIFT octaves, warp->ladder) faster fused than staged.
+  * **window** — the PR-1..3 overlapping-window model: every grid step
+    DMAs the full accumulated-halo window and recomputes each stage's
+    halo rows.  Identical results, no carried state.
+  * **ref** — the staged `ref.chain_ref` jnp path (no Pallas launch; the
+    measured-autotune fallback routes small single-stage chains here on
+    backends where a fused launch loses).
+  * `mode=None` consults `autotune.measure_chain`'s cached winner for
+    this (chain, shape, dtype, backend), else picks streaming/window by
+    the halo heuristic.
+
 Block-width selection: `vc=None` autotunes via
 `repro.core.autotune.chain_working_set` — the largest lmul whose
 accumulated-halo, widened, band-count-aware working set fits VMEM (the
-paper's m8 ceiling, chain-aware).
+paper's m8 ceiling, chain-aware; streaming mode charges the strictly
+smaller ring-carry footprint).
 """
 from __future__ import annotations
 
@@ -74,10 +97,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import compat, uintr
 from repro.core.autotune import (WIDENING_OPS,  # noqa: F401  (re-export)
-                                 chain_accumulated_halo, resolve_chain)
+                                 chain_accumulated_halo, chain_iface,
+                                 chain_stream_plan, resolve_chain)
 from repro.core.vector import VectorConfig
 
 from . import ref
@@ -664,18 +689,33 @@ def _crop_rows(band: Array, ph: int) -> Array:
     return band if ph == 0 else band[..., ph:band.shape[-2] - ph, :]
 
 
-def _chain_kernel(x_ref, *refs, plan, carrier, interp, n_out):
+def _chain_kernel(x_ref, *refs, plan, carrier, interp, n_out,
+                  splan=None, n_ring=0):
     """plan: per-stage (op, static, mode, tap_idx, (ph, pw), meta).  The
     band state is a list; all bands share rows (the driver's backward
     recurrence sizes the input window so every shape below is exact).
     `meta` is static per-stage geometry: (row step, row offset, col origin)
     for gather stages — which, with the grid step, recovers the band's
-    absolute image coordinates — and (row phase, out rows) for pyr_up."""
-    out_refs = refs[len(refs) - n_out:]
-    w_refs = refs[:len(refs) - n_out]
-    bands = [x_ref[...]]                 # (P, R_window, WP) carrier dtype
+    absolute image coordinates — and (row phase, out rows) for pyr_up.
+
+    `splan` switches on the streaming row-carry mode: ``(mult0, r0,
+    sstages)`` with per-stage ``(sin_lo, sin_r, ring_rows, d_rows,
+    op_rids, d_rids, smeta)``.  Step 0 runs the window pass and primes
+    every ring with the tail rows of each band's stream; steps i>0 run
+    the stream pass, which computes only each stage's new rows from
+    (ring ++ upstream new rows) and rotates the rings — so redundant
+    halo recompute no longer scales with chain depth."""
+    n_w = len(refs) - n_out - n_ring
+    w_refs = refs[:n_w]
+    out_refs = refs[n_w:n_w + n_out]
+    ring_refs = refs[n_w + n_out:]
     band_i = pl.program_id(1)
-    wi = 0
+
+    wts_k, wi = [], 0
+    for op, *_ in plan:
+        nw = _N_WEIGHTS[op]
+        wts_k.append(tuple(w_refs[wi + t][...] for t in range(nw)))
+        wi += nw
 
     def apply(op, band, wts, static, dtype, meta):
         if op == "warp_affine":
@@ -688,28 +728,109 @@ def _chain_kernel(x_ref, *refs, plan, carrier, interp, n_out):
             return _apply_pyr_up(band, dtype, meta, interp=interp)
         return _APPLY[op](band, wts, static, dtype, interp=interp)
 
-    for op, static, mode, tap, (ph, pw), meta in plan:
-        nw = _N_WEIGHTS[op]
-        wts = tuple(w_refs[wi + t][...] for t in range(nw))
-        wi += nw
-        if mode == "emit":               # sobel: last band -> f32 (dx, dy)
-            dx, dy = _apply_sobel(bands[-1], interp=interp)
-            bands = [_crop_rows(b, ph) for b in bands[:-1]] + [dx, dy]
-        elif mode == "reduce":           # grad_mag pair: last two -> one
-            out = _apply_grad_pair(bands[-2], bands[-1], carrier)
-            bands = [_crop_rows(b, ph) for b in bands[:-2]] + [out]
-        elif mode == "tap":              # apply to band `tap`, append result
-            new = apply(op, bands[tap], wts, static, bands[tap].dtype, meta)
-            if interp:
-                # a tapped band has >1 consumer (the out store + later taps
-                # + per-stage crops); pin it or XLA-CPU loop fusion
-                # re-derives the whole ladder per consumer (see §Perf)
-                new = _materialize(new)
-            bands = [_crop_rows(b, ph) for b in bands] + [new]
-        else:                            # map over every band
-            bands = [apply(op, b, wts, static, b.dtype, meta) for b in bands]
-    for out_ref, b in zip(out_refs, bands):
-        out_ref[...] = b
+    def store(bands):
+        for out_ref, b in zip(out_refs, bands):
+            out_ref[...] = b
+
+    def window_pass(prime):
+        bands = [x_ref[...]]             # (P, R_window, WP) carrier dtype
+        for k, (op, static, mode, tap, (ph, pw), meta) in enumerate(plan):
+            wts = wts_k[k]
+            if prime:
+                # ring contents == the tail of each band's stream before
+                # this stage consumed it: exactly what step 1 must read
+                _, _, ring_rows, d_rows, op_rids, d_rids, _ = splan[2][k]
+                srcs = (bands if mode == "map" else
+                        [bands[tap]] if mode == "tap" else
+                        [bands[-1]] if mode == "emit" else [])
+                for rid, src in zip(op_rids, srcs):
+                    ring_refs[rid][...] = src[..., src.shape[-2] - ring_rows:, :]
+                dsrcs = (bands if mode == "tap" else
+                         bands[:-1] if mode == "emit" else [])
+                for rid, src in zip(d_rids, dsrcs):
+                    ring_refs[rid][...] = src[..., src.shape[-2] - d_rows:, :]
+            if mode == "emit":           # sobel: last band -> f32 (dx, dy)
+                dx, dy = _apply_sobel(bands[-1], interp=interp)
+                bands = [_crop_rows(b, ph) for b in bands[:-1]] + [dx, dy]
+            elif mode == "reduce":       # grad_mag pair: last two -> one
+                out = _apply_grad_pair(bands[-2], bands[-1], carrier)
+                bands = [_crop_rows(b, ph) for b in bands[:-2]] + [out]
+            elif mode == "tap":          # apply to band `tap`, append result
+                new = apply(op, bands[tap], wts, static, bands[tap].dtype, meta)
+                if interp:
+                    # a tapped band has >1 consumer (the out store + later
+                    # taps + per-stage crops); pin it or XLA-CPU loop fusion
+                    # re-derives the whole ladder per consumer (see §Perf)
+                    new = _materialize(new)
+                bands = [_crop_rows(b, ph) for b in bands] + [new]
+            else:                        # map over every band
+                bands = [apply(op, b, wts, static, b.dtype, meta)
+                         for b in bands]
+        store(bands)
+
+    def stream_pass():
+        mult0, r0, sstages = splan
+        # each live band is represented by its `mult` NEW rows at the
+        # current stage's input; band 0 starts as the window's fresh tail
+        news = [x_ref[..., r0 - mult0:r0, :]]
+        for k, (op, static, mode, tap, (ph, pw), _wmeta) in enumerate(plan):
+            sin_lo, sin_r, ring_rows, d_rows, op_rids, d_rids, smeta = \
+                sstages[k]
+            wts = wts_k[k]
+
+            def buf_of(src, rid, sin_lo=sin_lo, sin_r=sin_r,
+                       ring_rows=ring_rows):
+                # stage body input = carried ring rows ++ upstream new rows
+                # (stage 0 slices the window: its history is DMA-resident)
+                if sin_lo is not None:
+                    return x_ref[..., sin_lo:sin_lo + sin_r, :]
+                if ring_rows == 0:
+                    return src
+                buf = jnp.concatenate([ring_refs[rid][...], src], axis=-2)
+                ring_refs[rid][...] = buf[..., buf.shape[-2] - ring_rows:, :]
+                return buf
+
+            def delayed(bs, d_rids=d_rids, d_rows=d_rows):
+                # pass-through bands lag by the stage halo (d_rows FIFO) so
+                # the band state stays row-aligned with the tapped output
+                if d_rows == 0:
+                    return list(bs)
+                out = []
+                for b, rid in zip(bs, d_rids):
+                    db = jnp.concatenate([ring_refs[rid][...], b], axis=-2)
+                    ring_refs[rid][...] = db[..., db.shape[-2] - d_rows:, :]
+                    out.append(db[..., :b.shape[-2], :])
+                return out
+
+            if mode == "emit":
+                buf = buf_of(news[-1], op_rids[0] if op_rids else None)
+                dx, dy = _apply_sobel(buf, interp=interp)
+                news = delayed(news[:-1]) + [dx, dy]
+            elif mode == "reduce":
+                news = news[:-2] + [_apply_grad_pair(news[-2], news[-1],
+                                                     carrier)]
+            elif mode == "tap":
+                buf = buf_of(news[tap], op_rids[0] if op_rids else None)
+                new = apply(op, buf, wts, static, news[tap].dtype, smeta)
+                if interp:
+                    new = _materialize(new)
+                news = delayed(news) + [new]
+            else:
+                news = [apply(op, buf_of(b, op_rids[j] if op_rids else None),
+                              wts, static, b.dtype, smeta)
+                        for j, b in enumerate(news)]
+        store(news)
+
+    if splan is None:
+        window_pass(False)
+    else:
+        @pl.when(band_i == 0)
+        def _():
+            window_pass(True)
+
+        @pl.when(band_i != 0)
+        def _():
+            stream_pass()
 
 
 # ---------------------------------------------------------------------------
@@ -762,9 +883,9 @@ def _band_meta(resolved, carrier):
     return bands
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "vc"))
+@functools.partial(jax.jit, static_argnames=("spec", "vc", "stream"))
 def _chain_planes(planes: Array, weights: tuple, spec: tuple,
-                  vc: VectorConfig) -> tuple:
+                  vc: VectorConfig, stream: bool = False) -> tuple:
     """(N, H, W) planes -> tuple of output bands (N, H_k, W_k): the whole
     chain in one pallas_call.
 
@@ -773,8 +894,15 @@ def _chain_planes(planes: Array, weights: tuple, spec: tuple,
     per-grid-step overhead the same way lmul widens the band.  Strided
     stages shrink the store-side geometry (out_specs per band); the input
     window is sized by an exact backward walk in *image coordinates*
-    (`iface` below), which subsumes R_in = R_out*stride + 2*halo and
-    inverts for upsamples (R_in = ceil(R_out/2) + taps for pyr_up)."""
+    (`autotune.chain_iface`), which subsumes R_in = R_out*stride + 2*halo
+    and inverts for upsamples (R_in = ceil(R_out/2) + taps for pyr_up).
+
+    `stream=True` adds the row-carry plan: per-stage VMEM scratch rings
+    (`autotune.chain_stream_plan`) sized by each band's halo, primed at
+    grid step 0 by the window pass and rotated by the stream pass — the
+    row axis of the grid iterates innermost/sequentially, so scratch
+    persists across the steps of one plane block and is re-primed when
+    the plane-block axis advances (no cross-plane bleed)."""
     from repro.core.autotune import plane_block
 
     stages = _respec(spec, weights)
@@ -782,7 +910,7 @@ def _chain_planes(planes: Array, weights: tuple, spec: tuple,
     N, H, W = planes.shape
     ph_in, pw_in = chain_accumulated_halo(stages)
     rows = vc.rows(planes.dtype)
-    P = plane_block(stages, W, N, vc, in_dtype=planes.dtype)
+    P = plane_block(stages, W, N, vc, in_dtype=planes.dtype, streaming=stream)
     n_pad = (-N) % P
 
     # forward geometry: final full-res image size + net map scale (down/up)
@@ -808,24 +936,7 @@ def _chain_planes(planes: Array, weights: tuple, spec: tuple,
     # backward row walk in image coordinates: iface[k] = (mult, off, r)
     # means band i consumes image rows [i*mult + off, i*mult + off + r) at
     # stage k's input resolution (iface[-1] is the final output band).
-    iface = [(rows, 0, rows)]
-    for op, mode, halo, stride, up, _, _, _ in reversed(resolved):
-        mult, off, r = iface[0]
-        h = halo[0]
-        if mode == "map" and up[0] > 1:
-            if mult % up[0]:
-                raise ValueError(
-                    f"chain upsample {op!r}: band step {mult} is not "
-                    f"divisible by {up[0]} (use a larger lmul or fewer "
-                    f"stacked upsamples)")
-            off2 = off // up[0] - h
-            end2 = (off + r - 1) // up[0] + h + 1
-            iface.insert(0, (mult // up[0], off2, end2 - off2))
-        elif mode == "map":
-            s = stride[0]
-            iface.insert(0, (mult * s, s * off - h, s * r + 2 * h))
-        else:
-            iface.insert(0, (mult, off - h, r + 2 * h))
+    iface = chain_iface(resolved, rows)
     mult0, off0, r_window = iface[0]
     pad_top = -off0
     n_bands = max(1, -(-h_fin // rows))
@@ -861,10 +972,14 @@ def _chain_planes(planes: Array, weights: tuple, spec: tuple,
     # window — a declared bound that undershoots the halo ring the later
     # stages consume would silently clamp gathers, so it raises here.
     metas = []
+    stage_cos, stage_wps = [], []    # per-stage col origin / padded width
     co = -pw_l                  # image col of local col 0 at current stage
+    wp_cur = wp
     h_cur, w_cur = H, W
     for k, (op, mode, halo, stride, up, _, _, _) in enumerate(resolved):
         mult_k, off_k, r_k = iface[k]
+        stage_cos.append(co)
+        stage_wps.append(wp_cur)
         if op in _GATHER_OPS:
             metas.append((mult_k, off_k, co))
             hy, hx = halo
@@ -903,8 +1018,10 @@ def _chain_planes(planes: Array, weights: tuple, spec: tuple,
             h_cur, w_cur = _out_hw(op, h_cur, w_cur)
             if stride[1] > 1:
                 co = co // stride[1]
+                wp_cur = wp_cur // stride[1]
             elif up[1] > 1:
                 co = co * up[1]
+                wp_cur = wp_cur * up[1]
 
     w_specs, w_args = [], []
     for s in stages:
@@ -915,6 +1032,61 @@ def _chain_planes(planes: Array, weights: tuple, spec: tuple,
     plan = tuple((s.op, s.static, mode, tap, halo, meta)
                  for s, (op, mode, halo, stride, up, n_in, n_out, tap), meta
                  in zip(stages, resolved, metas))
+
+    # streaming carry plan: scratch ring wiring per stage (see the module
+    # docstring and autotune.chain_stream_plan for the row math)
+    splan, ring_shapes = None, []
+    if stream:
+        sp = chain_stream_plan(resolved, iface)
+
+        def alloc(rows_a, wp_a, dt):
+            ring_shapes.append(((P, rows_a, wp_a), dt))
+            return len(ring_shapes) - 1
+
+        band_dts = [planes.dtype]
+        sstages = []
+        for k, (op, mode, halo, stride, up, n_in, n_out_k, tap) \
+                in enumerate(resolved):
+            sin_off, sin_r, ring_rows, d_rows = sp[k]
+            mult_k, off_k, r_k = iface[k]
+            wp_k = stage_wps[k]
+            op_rids, d_rids = (), ()
+            if k > 0 and ring_rows > 0:
+                # stage 0's body input is a static slice of the DMA'd
+                # window itself — no ring needed for its history
+                if mode == "map":
+                    op_rids = tuple(alloc(ring_rows, wp_k, dt)
+                                    for dt in band_dts)
+                elif mode == "tap":
+                    op_rids = (alloc(ring_rows, wp_k, band_dts[tap]),)
+                elif mode == "emit":
+                    op_rids = (alloc(ring_rows, wp_k, band_dts[-1]),)
+            if d_rows > 0:
+                dsrc = (band_dts if mode == "tap" else
+                        band_dts[:-1] if mode == "emit" else [])
+                d_rids = tuple(alloc(d_rows, wp_k, dt) for dt in dsrc)
+            if op in _GATHER_OPS:
+                smeta = (mult_k, sin_off, stage_cos[k])
+            elif op == "pyr_up":
+                mult_o, off_o, r_o = iface[k + 1]
+                p2s = (off_o + r_o - mult_o) - 2 * (sin_off + 1)
+                if not 0 <= p2s <= 1:       # even/odd phase of the streamed
+                    raise AssertionError(   # interface; anything else would
+                        f"pyr_up stream phase {p2s} out of range")  # mis-slice
+                smeta = (p2s, mult_o)
+            else:
+                smeta = None
+            sstages.append((sin_off - off0 if k == 0 else None, sin_r,
+                            ring_rows, d_rows, op_rids, d_rids, smeta))
+            if mode == "emit":
+                band_dts = band_dts[:-1] + [jnp.float32, jnp.float32]
+            elif mode == "reduce":
+                band_dts = band_dts[:-2] + [planes.dtype]
+            elif mode == "tap":
+                band_dts = band_dts + [band_dts[tap]]
+        if ring_shapes:
+            splan = (mult0, r_window, tuple(sstages))
+        # a halo-free chain carries nothing: the window pass IS minimal
 
     out_specs, out_shapes, crops = [], [], []
     wp_full = wp * ux // nx
@@ -929,19 +1101,30 @@ def _chain_planes(planes: Array, weights: tuple, spec: tuple,
 
     outs = pl.pallas_call(
         functools.partial(_chain_kernel, plan=plan, carrier=planes.dtype,
-                          interp=vc.run_interpret, n_out=len(bands)),
+                          interp=vc.run_interpret, n_out=len(bands),
+                          splan=splan, n_ring=len(ring_shapes)),
         grid=((N + n_pad) // P, n_bands),
         in_specs=[pl.BlockSpec((P, r_window, wp),
                                lambda n, i: (n * P, i * mult0, 0),
                                indexing_mode=pl.Unblocked())] + w_specs,
         out_specs=out_specs,
         out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM(shape, dt) for shape, dt in ring_shapes],
         interpret=vc.run_interpret,
     )(x, *w_args)
     if not isinstance(outs, (list, tuple)):
         outs = (outs,)
     return tuple(o[:N, :h_k, pw_k:pw_k + w_k]
                  for o, (h_k, w_k, pw_k) in zip(outs, crops))
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _chain_ref_planes(img: Array, weights: tuple, spec: tuple):
+    """The `mode="ref"` execution plan, jit-compiled: the staged
+    `ref.chain_ref` path must ship the same XLA program the measured
+    autotune timed (eager chain_ref pays per-op dispatch that the
+    measurement — and any serious caller — does not)."""
+    return ref.chain_ref(img, _respec(spec, weights))
 
 
 def _spec_of(stages) -> tuple:
@@ -962,12 +1145,26 @@ def _respec(spec, weights) -> tuple[Stage, ...]:
     return tuple(out)
 
 
-def fused_chain(img: Array, stages, *, vc: VectorConfig | None = None):
+def fused_chain(img: Array, stages, *, vc: VectorConfig | None = None,
+                mode: str | None = None):
     """Run a stage chain over an image in ONE Pallas launch.
 
     img: (H, W), (H, W, C) or (B, H, W, C); u8 / f32 / bf16 carrier.
     vc: block width; None = chain-aware autotune (largest lmul whose
-        accumulated-halo, band-count-aware working set fits VMEM).
+        accumulated-halo, band-count-aware working set fits VMEM —
+        streaming mode charges the smaller ring-carry footprint).
+    mode: execution plan — "streaming" (row-carry rings; default for
+        chains with row halo), "window" (overlapping-window recompute),
+        "ref" (staged `ref.chain_ref`, no Pallas launch), or None/"auto"
+        (the `autotune.measure_chain` cached winner for this chain +
+        shape + dtype + vc + backend, else the halo heuristic).
+        Streaming and window are bit-identical for every stencil stage;
+        "ref" agrees within the repo's oracle tolerance (u8/bf16
+        float-accumulating stages may land a .5 rounding tie one ulp
+        apart — the module-docstring border-semantics caveat), and
+        fractional-coordinate gathers carry the documented
+        coordinate-ulp caveat across *any* two differently-fused
+        programs.
 
     Returns a single array when the chain ends with one live band, else a
     tuple of arrays (one per band — e.g. a Gaussian ladder's scales plus a
@@ -990,26 +1187,38 @@ def fused_chain(img: Array, stages, *, vc: VectorConfig | None = None):
                   else (img.shape[-3], img.shape[-2]))
     if h_in <= ph_in or w_in <= pw_in:
         return ref.chain_ref(img, stages)
+    if mode in (None, "auto"):
+        from repro.core.autotune import cached_chain_mode
+        mode = cached_chain_mode(stages, img.shape, img.dtype, vc)
+        if mode is None:
+            # heuristic: carry rows whenever there is row halo to carry
+            mode = "streaming" if ph_in > 0 else "window"
+    if mode == "ref":
+        return _chain_ref_planes(img, _flat_weights(stages), _spec_of(stages))
+    if mode not in ("streaming", "window"):
+        raise ValueError(f"fused_chain: unknown mode {mode!r} (expected "
+                         "'streaming', 'window', 'ref' or None)")
+    stream = mode == "streaming"
     if vc is None:
         from repro.core.autotune import pick_chain_lmul
         vc = pick_chain_lmul(stages, img.shape[-2] if img.ndim > 2 else img.shape[-1],
-                             in_dtype=img.dtype)
+                             in_dtype=img.dtype, streaming=stream)
 
     global _LAUNCHES
     _LAUNCHES += 1
 
     spec, weights = _spec_of(stages), _flat_weights(stages)
     if img.ndim == 2:
-        outs = _chain_planes(img[None], weights, spec, vc)
+        outs = _chain_planes(img[None], weights, spec, vc, stream=stream)
         outs = tuple(o[0] for o in outs)
     elif img.ndim == 3:                    # (H, W, C) -> planes (C, H, W)
         planes = jnp.moveaxis(img, -1, 0)
-        outs = _chain_planes(planes, weights, spec, vc)
+        outs = _chain_planes(planes, weights, spec, vc, stream=stream)
         outs = tuple(jnp.moveaxis(o, 0, -1) for o in outs)
     else:                                  # (B, H, W, C) -> planes (B*C, H, W)
         B, H, W, C = img.shape
         planes = jnp.moveaxis(img, -1, 1).reshape(B * C, H, W)
-        outs = _chain_planes(planes, weights, spec, vc)
+        outs = _chain_planes(planes, weights, spec, vc, stream=stream)
         outs = tuple(jnp.moveaxis(o.reshape(B, C, *o.shape[1:]), 1, -1)
                      for o in outs)
     return outs[0] if len(outs) == 1 else outs
