@@ -1,7 +1,7 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test bench-quick bench pipeline-bench perf-gate autotune-cache
+.PHONY: test lint bench-quick bench pipeline-bench perf-gate autotune-cache
 
 # MODE=streaming|window|both selects the fused-chain execution plan(s)
 # the pipeline benches time (default both; see kernels/stencil.py modes)
@@ -9,6 +9,10 @@ MODE ?= both
 
 test:            ## tier-1 verify
 	python -m pytest -x -q
+
+lint:            ## ruff check + format ratchet (CI pins ruff==0.9.9)
+	ruff check src/repro/kernels src/repro/core src/repro/cv benchmarks
+	ruff format --check src benchmarks tests
 
 bench-quick:     ## quick benchmark pass (writes BENCH_results.json)
 	python -m benchmarks.run --quick --mode $(MODE)
@@ -19,8 +23,10 @@ bench:           ## full benchmark pass
 pipeline-bench:  ## fused-vs-staged acceptance benchmark only
 	python -m benchmarks.pipeline_bench --mode=$(MODE)
 
+# MODE is passed through so a `make bench-quick MODE=window` run is gated
+# against window-only history rows (like-for-like), not the both-plan ones
 perf-gate:       ## fail on perf regressions vs BENCH_results.json history
-	python -m benchmarks.perf_gate
+	python -m benchmarks.perf_gate --mode $(MODE)
 
 autotune-cache:  ## inspect the measured chain-mode cache
 	python -m repro.core.autotune --show-cache

@@ -16,7 +16,6 @@ import jax.numpy as jnp
 from repro.core.vector import VectorConfig
 from repro.cv import bow, pipeline
 from repro.data.synthetic import ImageStream
-from repro.kernels import ref as kref
 
 from .common import print_table, save_json
 
@@ -54,7 +53,7 @@ def run(*, quick: bool = False):
         {"stage": "feature generation", "seconds": round(timing["feature_generation"], 3)},
         {"stage": "prediction", "seconds": round(timing["prediction"], 4)},
         {"stage": "(II) XLA argmin rung", "seconds": round(t_ref, 4)},
-        {"stage": f"(II) fused-kernel HBM saved", "seconds": f"{dist_bytes/1e6:.1f} MB dist matrix never materialized"},
+        {"stage": "(II) fused-kernel HBM saved", "seconds": f"{dist_bytes/1e6:.1f} MB dist matrix never materialized"},
         {"stage": "test accuracy", "seconds": acc},
     ]
     print_table("Paper T7-9: BoW+SVM test stages", ["stage", "value"],

@@ -80,7 +80,7 @@ def git_sha() -> str:
 # would change the row identity exactly when a plan regresses enough to
 # flip it, blinding the gate at the worst moment.
 ROW_KEYS = ("batch", "image", "resolution", "chain", "kernel", "size",
-            "case", "dtype", "n_scales", "modes_timed")
+            "case", "dtype", "n_scales", "n_octaves", "modes_timed")
 
 
 def row_key(row: dict) -> tuple:
@@ -102,7 +102,7 @@ def print_delta(data: dict) -> None:
         print("\n(perf delta: no previous history entry to diff against)")
         return
     cur = hist[-1]
-    print(f"\n### Perf delta vs previous run "
+    print("\n### Perf delta vs previous run "
           f"({hist[-2]['sha']} {hist[-2]['date']})\n")
     any_row = False
     for bench, rows in sorted(cur.get("results", {}).items()):

@@ -5,7 +5,6 @@ wall-clock — the algorithmic win), Pallas lmul 1 vs 4 (structural).
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.core import autotune
 from repro.core.autotune import erode_working_set, pick_lmul

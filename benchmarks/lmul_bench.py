@@ -4,7 +4,6 @@ for each Pallas kernel in the library.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.core.autotune import erode_working_set, filter2d_working_set, pick_lmul
 from repro.core.vector import VectorConfig

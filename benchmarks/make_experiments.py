@@ -5,7 +5,6 @@
 """
 from __future__ import annotations
 
-import json
 import os
 import sys
 
@@ -48,7 +47,7 @@ def roofline_md(rows) -> str:
                 continue
             if r["status"] != "ok":
                 body.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
-                            f"skip | — | — | — | — |")
+                            "skip | — | — | — | — |")
                 continue
             body.append(
                 f"| {r['arch']} | {r['shape']} | {analyze.fmt_time(r['t_compute'])} | "

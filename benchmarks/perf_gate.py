@@ -1,27 +1,49 @@
 """CI perf gate: `python -m benchmarks.perf_gate` exits non-zero when the
 recorded perf trajectory regresses.
 
-Three rules (ISSUE 4 satellite):
+Rules:
 
   1. Absolute floor — the acceptance chain (gauss -> erode -> thresh) must
      keep ``fused_speedup >= 1.2`` vs the staged per-op path.
-  2. Streaming beats window — the deep-ladder rows (octave, warp) must
-     show the streaming plan no slower than the overlapping-window plan
-     (the tentpole claim; holds by ~1.7-3x at every shape, so this rule
-     fires on CI --quick runs too, where rule 3 has no same-shape
-     history to compare against).
-  3. No regression — the octave and warp fused-vs-staged speedups must not
-     drop below the value recorded in the *previous* `history` entry that
-     measured the same row (bench + shape + requested mode knob; --quick
-     and full rows are never compared against each other).  A 15%
-     relative tolerance absorbs CI-runner wall-clock noise.
+  2. Streaming beats window — the deep-ladder rows (octave, warp, and the
+     multi-octave pyramid) must show the streaming plan no slower than the
+     overlapping-window plan (the PR-4 claim; fires on CI --quick runs
+     too, where rule 3 may have no same-shape history yet).
+  3. No regression — the octave/warp/pyramid fused-vs-staged speedups must
+     not drop below the value recorded in the *previous* `history` entry
+     that measured the same row (bench + shape + requested mode knob;
+     --quick and full rows are never compared against each other).  A 15%
+     relative tolerance absorbs CI-runner wall-clock noise.  Every
+     comparison is printed as a delta line so the job log shows exactly
+     which previous entry each row was gated against.
+
+Flags:
+
+  --mode M            gate only rows whose recorded `modes_timed` knob is
+                      M (the Makefile's MODE passthrough: a deliberate
+                      window-only pass is gated against window-only
+                      history, never against a both-plan row).
+  --require-history   main-branch runs: fail LOUDLY when the previous CI
+                      run's history was not actually merged (the
+                      `_ci_history` provenance marker merge_history.py
+                      writes is missing — a silently-failed artifact
+                      download leaves the checked-in dev-machine history
+                      in place, which would otherwise still satisfy the
+                      entry-count and row-match conditions), when there is
+                      no previous entry at all, or when no gated row found
+                      a match — instead of passing because rule 3 had
+                      nothing to do.  CI passes the flag only when a
+                      previous successful main run exists (bootstrap: the
+                      first-ever main run has nothing to require).
 
 Reads BENCH_results.json at the repo root (written by `make bench-quick` /
 `benchmarks/run.py`, which appends every run to `history` keyed by git
-SHA + date).
+SHA + date; CI merges the previous run's downloaded history first — see
+benchmarks/merge_history.py).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 
@@ -31,17 +53,31 @@ MIN_PIPELINE_SPEEDUP = 1.2
 REGRESSION_TOLERANCE = 0.85      # current >= 0.85 * previous
 STREAM_VS_WINDOW_TOLERANCE = 1.1  # streaming <= 1.1 * window on ladders
 
+# deep-ladder benches gated by rules 2 and 3 (fused-vs-staged no-regress)
+LADDER_BENCHES = ("octave", "warp", "pyramid")
 
-def check(data: dict) -> list[str]:
+
+def _gated(data: dict, bench: str, mode: str | None):
+    for row in data.get(bench, []):
+        if mode is not None and row.get("modes_timed") not in (None, mode):
+            continue
+        yield row
+
+
+def check(data: dict, *, mode: str | None = None,
+          require_history: bool = False) -> list[str]:
     fails = []
-    for row in data.get("pipeline", []):
+    n_gated = 0
+    for row in _gated(data, "pipeline", mode):
+        n_gated += 1
         sp = row.get("fused_speedup")
         if sp is not None and sp < MIN_PIPELINE_SPEEDUP:
             fails.append(f"pipeline {row.get('batch')}: fused_speedup {sp} "
                          f"< {MIN_PIPELINE_SPEEDUP} floor")
 
-    for bench in ("octave", "warp"):
-        for row in data.get(bench, []):
+    for bench in LADDER_BENCHES:
+        for row in _gated(data, bench, mode):
+            n_gated += 1
             ts = row.get("fused_streaming_s")
             tw = row.get("fused_window_s")
             if ts is not None and tw is not None \
@@ -49,48 +85,99 @@ def check(data: dict) -> list[str]:
                 fails.append(
                     f"{bench} {row.get('image')}: streaming plan "
                     f"({ts}s) slower than the window plan ({tw}s) — the "
-                    f"row-carry rings are not paying off")
+                    "row-carry rings are not paying off")
 
     hist = data.get("history", [])
-    if len(hist) < 2:
-        return fails
-    for bench in ("octave", "warp"):
-        for row in data.get(bench, []):
-            sp = row.get("fused_speedup")
-            if sp is None:
-                continue
-            key = row_key(row)
-            prev = None
-            for entry in reversed(hist[:-1]):
-                prev = match_row(entry.get("results", {}).get(bench), key)
-                if prev and prev.get("fused_speedup") is not None:
-                    break
-                prev = None
-            if prev is None:
-                continue
-            floor = prev["fused_speedup"] * REGRESSION_TOLERANCE
-            if sp < floor:
-                fails.append(
-                    f"{bench} {dict(key)}: fused_speedup {sp} regressed "
-                    f"below {floor:.2f} (= {REGRESSION_TOLERANCE} x previous "
-                    f"{prev['fused_speedup']} @ {hist[-2].get('sha')})")
+    compared = 0
+    if len(hist) >= 2:
+        for bench in LADDER_BENCHES:
+            for row in _gated(data, bench, mode):
+                sp = row.get("fused_speedup")
+                if sp is None:
+                    continue
+                key = row_key(row)
+                prev, prev_entry = None, None
+                for entry in reversed(hist[:-1]):
+                    prev = match_row(entry.get("results", {}).get(bench), key)
+                    if prev and prev.get("fused_speedup") is not None:
+                        prev_entry = entry
+                        break
+                    prev = None
+                if prev is None:
+                    print(f"  (no previous history entry for {bench} "
+                          f"{dict(key)} — new row, not gated)")
+                    continue
+                compared += 1
+                prev_sp = prev["fused_speedup"]
+                # the visible delta line: which entry this row was gated
+                # against, and by how much it moved
+                print(f"  delta {bench} {dict(key)}: fused_speedup "
+                      f"{prev_sp} -> {sp} vs {prev_entry.get('sha')} "
+                      f"{prev_entry.get('date')} "
+                      f"({(sp / prev_sp - 1) * 100:+.1f}%)")
+                floor = prev_sp * REGRESSION_TOLERANCE
+                if sp < floor:
+                    fails.append(
+                        f"{bench} {dict(key)}: fused_speedup {sp} regressed "
+                        f"below {floor:.2f} (= {REGRESSION_TOLERANCE} x "
+                        f"previous {prev_sp} @ {prev_entry.get('sha')})")
+
+    # a --mode filter that matches NOTHING must not pass vacuously: a
+    # `make bench-quick MODE=window` run followed by a default-MODE gate
+    # would otherwise check zero rows (including the acceptance floor)
+    if mode is not None and n_gated == 0:
+        fails.append(
+            f"--mode {mode}: no recorded row has modes_timed={mode!r} — "
+            "the gate checked nothing (re-run the bench with MODE="
+            f"{mode}, or gate with the MODE the bench recorded)")
+
+    if require_history:
+        if "_ci_history" not in data:
+            fails.append(
+                "--require-history: BENCH_results.json has no _ci_history "
+                "provenance marker — benchmarks/merge_history.py never "
+                "merged the previous CI run's artifact (download failed?), "
+                "so the gate would compare against stale checked-in "
+                "history")
+        if len(hist) < 2:
+            fails.append(
+                "--require-history: no previous history entry in "
+                f"{RESULTS_PATH} ({len(hist)} entries) — the bench-smoke "
+                "artifact download/merge produced nothing to gate against")
+        elif compared == 0:
+            fails.append(
+                "--require-history: history exists but NO ladder row "
+                "matched a previous entry (row identity drifted? see "
+                "common.ROW_KEYS) — the regression gate compared nothing")
     return fails
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--mode", default=None,
+                    choices=[None, "both", "streaming", "window"],
+                    help="gate only rows recorded with this modes_timed "
+                         "knob (Makefile MODE passthrough)")
+    ap.add_argument("--require-history", action="store_true",
+                    help="fail when no previous history entry was found "
+                         "(main-branch CI runs)")
+    args = ap.parse_args(argv)
     try:
         with open(RESULTS_PATH) as f:
             data = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         print(f"perf_gate: cannot read {RESULTS_PATH}: {e}")
         return 1
-    fails = check(data)
+    fails = check(data, mode=args.mode,
+                  require_history=args.require_history)
     if fails:
         print("perf_gate: FAIL")
         for f_ in fails:
             print(f"  - {f_}")
         return 1
-    print("perf_gate: OK (acceptance floor + history regression checks)")
+    print("perf_gate: OK (acceptance floor + streaming-vs-window + "
+          "history regression checks"
+          + (", history required" if args.require_history else "") + ")")
     return 0
 
 

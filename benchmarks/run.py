@@ -39,6 +39,7 @@ def main():
         pipeline_bench.run(quick=args.quick, mode=args.mode)
         pipeline_bench.run_octave(quick=args.quick, mode=args.mode)
         pipeline_bench.run_warp(quick=args.quick, mode=args.mode)
+        pipeline_bench.run_pyramid(quick=args.quick, mode=args.mode)
         pipeline_bench.run_small_kernel_routing(quick=args.quick)
     if args.only in (None, "bow"):
         bow_svm_bench.run(quick=args.quick)

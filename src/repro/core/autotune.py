@@ -44,8 +44,8 @@ class WorkingSet:
 def pick_lmul(ws: WorkingSet, *, base: VectorConfig | None = None) -> VectorConfig:
     """Largest lmul whose (double-buffered, widened) working set fits VMEM."""
     vc = base or VectorConfig()
-    for l in LMULS:
-        cand = vc.with_lmul(l)
+    for lm in LMULS:
+        cand = vc.with_lmul(lm)
         if ws.bytes(cand) <= cand.vmem_budget:
             return cand
     return vc.with_lmul(1)
@@ -61,6 +61,21 @@ def _round_lane(vc: VectorConfig, width: int, halo: int) -> int:
 WIDENING_OPS = frozenset({"filter2d", "sep_filter", "grad_mag", "affine",
                           "box", "pyr_down", "resize2", "sobel",
                           "pyr_up", "warp_affine", "remap"})
+
+
+def stage_out_hw(op: str | None, h: int, w: int) -> tuple[int, int]:
+    """Output (h, w) of one stage applied to an (h, w) image: replicate-border
+    halo ops preserve size; pyrDown is ceil-half (OpenCV), resize2 floor,
+    pyrUp doubles exactly.  Shared with kernels/stencil.py (its `_out_hw`)
+    so the cross-launch pyramid accounting below and the chain compiler can
+    never disagree about per-link geometry."""
+    if op == "pyr_down":
+        return (h + 1) // 2, (w + 1) // 2
+    if op == "resize2":
+        return h // 2, w // 2
+    if op == "pyr_up":
+        return 2 * h, 2 * w
+    return h, w
 
 
 @dataclass(frozen=True)
@@ -158,7 +173,7 @@ def chain_iface(plan, rows: int) -> list:
                 raise ValueError(
                     f"chain upsample {op!r}: band step {mult} is not "
                     f"divisible by {up[0]} (use a larger lmul or fewer "
-                    f"stacked upsamples)")
+                    "stacked upsamples)")
             off2 = off // up[0] - h
             end2 = (off + r - 1) // up[0] + h + 1
             iface.insert(0, (mult // up[0], off2, end2 - off2))
@@ -320,6 +335,51 @@ def plane_block(stages, width: int, n_planes: int, vc: VectorConfig,
     return p
 
 
+def pyramid_plan(chains, shape, in_dtype=jnp.float32, *,
+                 streaming: bool = True,
+                 base: VectorConfig | None = None) -> list[dict]:
+    """Static per-link accounting for a cross-launch pyramid
+    (`stencil.chained_launches`): the shrinking per-octave plane geometry,
+    the block width the working-set rule picks for each link, and the
+    pyramid-tail `chain_ref` fallback.
+
+    `chains` is a sequence of stage chains where every non-final chain ends
+    with a strided terminal tap (the next_base contract) — link k+1's input
+    is that tap's output geometry.  Per link the record holds::
+
+        {"shape": (h, w)    — the link's input planes,
+         "halo": (ph, pw)   — its chain's accumulated halo,
+         "fallback": bool   — planes <= halo: fused_chain routes this link
+                              to ref.chain_ref (no launch, no working set),
+         "lmul": int | None — pick_chain_lmul's choice for the link's
+                              width (None when the link falls back); the
+                              tail links' smaller planes admit wider
+                              blocks, which is why autotune keys must be
+                              per-octave-shape, not per-pyramid}
+
+    The launch count of the pyramid is ``sum(not r["fallback"])``."""
+    h, w = int(shape[0]), int(shape[1])
+    out = []
+    for k, stages in enumerate(chains):
+        stages = tuple(stages)
+        ph, pw = chain_accumulated_halo(stages)
+        fallback = h <= ph or w <= pw
+        vc = (None if fallback else
+              pick_chain_lmul(stages, w, in_dtype, base=base,
+                              streaming=streaming))
+        out.append({"shape": (h, w), "halo": (ph, pw), "fallback": fallback,
+                    "lmul": None if fallback else vc.lmul})
+        if k < len(chains) - 1:
+            # the carry band is the final stage's strided terminal tap:
+            # walk the map-stage geometry, then apply the tap's own rule
+            hc, wc = h, w
+            for op, mode, halo, stride, up, _, _, _ in resolve_chain(stages):
+                if mode == "map":
+                    hc, wc = stage_out_hw(op, hc, wc)
+            h, w = stage_out_hw(stages[-1].op, hc, wc)
+    return out
+
+
 def filter2d_working_set(width: int, ksize: int, in_dtype=jnp.uint8) -> WorkingSet:
     """Single filter2d stage: widened f32 band w/ halo + f32 accumulator."""
     h = ksize // 2
@@ -396,12 +456,20 @@ def _load_disk_cache() -> None:
         pass
 
 
+def cached_chain_entry(stages, shape, dtype,
+                       vc: VectorConfig | None = None) -> dict | None:
+    """The full cached measurement ``{"mode", "times"}`` for this (chain,
+    shape, dtype, vc, backend), or None — lets benches reuse a decided
+    entry instead of re-timing (`pipeline_bench --quick`)."""
+    if not _DISK_CACHE_LOADED:
+        _load_disk_cache()
+    return _MODE_CACHE.get(_cache_key(stages, shape, dtype, vc))
+
+
 def cached_chain_mode(stages, shape, dtype,
                       vc: VectorConfig | None = None) -> str | None:
     """The measured winner for this (chain, shape, dtype, vc, backend)."""
-    if not _DISK_CACHE_LOADED:
-        _load_disk_cache()
-    hit = _MODE_CACHE.get(_cache_key(stages, shape, dtype, vc))
+    hit = cached_chain_entry(stages, shape, dtype, vc)
     return hit["mode"] if hit else None
 
 
@@ -461,6 +529,41 @@ def measure_chain(img, stages, *, vc: VectorConfig | None = None,
         except (OSError, json.JSONDecodeError):
             pass
     return entry
+
+
+def measure_pyramid(img, chains, *, vc: VectorConfig | None = None,
+                    n: int = 3, modes=CHAIN_MODES,
+                    persist: bool = True) -> list[dict]:
+    """Warm the measured-mode cache for a cross-launch pyramid, one entry
+    per link: walk `stencil.chained_launches`' structure, measuring each
+    link's chain on its *actual* per-octave input (the previous link's
+    carry band), so auto-mode pyramid callers hit a cache entry keyed by
+    that link's own (shrinking) shape — the per-octave-shape contract.
+
+    Links whose planes fall below their chain's accumulated halo are the
+    pyramid tail: `fused_chain` routes them to `ref.chain_ref` structurally
+    (no launch), so there is nothing to measure — they are recorded as
+    ``{"mode": "ref", "fallback": True}`` without timing.  Returns the
+    per-link entries."""
+    from repro.kernels import stencil
+
+    chains = tuple(tuple(c) for c in chains)
+    entries = []
+    base = img
+    for k, stages in enumerate(chains):
+        h, w = base.shape[-2:] if base.ndim == 2 else base.shape[-3:-1]
+        ph, pw = chain_accumulated_halo(stages)
+        if h <= ph or w <= pw:
+            entries.append({"mode": "ref", "fallback": True})
+        else:
+            entries.append(measure_chain(base, stages, vc=vc, n=n,
+                                         modes=modes, persist=persist))
+        if k < len(chains) - 1:
+            stencil.validate_next_base(stages)
+            outs = stencil.fused_chain(base, stages, vc=vc,
+                                       mode=entries[-1]["mode"])
+            base = outs[-1]
+    return entries
 
 
 def _show_cache() -> None:

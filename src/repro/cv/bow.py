@@ -22,9 +22,17 @@ def kmeans(key, desc: Array, weights: Array, *, k: int = 250, iters: int = 20):
     """Lloyd's k-means over descriptors (N, D) with sample weights (N,).
 
     Returns centroids (k, D). Empty clusters are re-seeded from the data.
+
+    Multi-octave descriptor sets (pipeline.extract_features(n_octaves>1))
+    can carry many zero-weight rows — deep pyramid octaves of small images
+    detect nothing — so the seeding distribution guards against a
+    degenerate all-zero weight vector by falling back to uniform instead
+    of propagating NaNs into the centroid init.
     """
     N, D = desc.shape
-    init_idx = jax.random.choice(key, N, (k,), replace=False, p=weights / jnp.sum(weights))
+    total = jnp.sum(weights)
+    p = jnp.where(total > 0, weights / jnp.maximum(total, 1e-6), 1.0 / N)
+    init_idx = jax.random.choice(key, N, (k,), replace=False, p=p)
     cents = desc[init_idx]
 
     def step(cents, _):

@@ -103,6 +103,127 @@ def gaussian_octave(img: Array, *, n_scales: int = 4, sigma0: float = 1.6,
     return jnp.stack(outs), None
 
 
+def pyramid_chains(n_octaves: int, n_scales: int = 4, sigma0: float = 1.6,
+                   max_ksize: int = 15) -> tuple:
+    """Per-octave stage chains of the multi-octave SIFT pyramid (shared
+    with benchmarks so the per-octave autotune entries they warm match the
+    product chains' signatures).
+
+    Octave 0 runs the base blur + incremental ladder (`octave_chain`).
+    Every later octave's base arrives *already* blurred to sigma0 in its
+    own coordinates — it is the pyrDown of the previous octave's 2x-sigma
+    scale (Lowe's construction) — so its chain is the tap ladder alone:
+    the carried base stays live as band 0 (scale 0) and each incremental
+    Gaussian appends a scale.  Every octave but the last ends with the
+    `next_base` terminal pyrDown tap (`stencil.validate_next_base`); the
+    last omits it, skipping the downsample's kernel work and its +2
+    accumulated halo."""
+    taps = ladder_taps(n_scales, sigma0, max_ksize)
+    chains = []
+    for k in range(n_octaves):
+        carry = k < n_octaves - 1
+        if k == 0:
+            # octave 0 IS the single-octave product chain (shared builder:
+            # its autotune cache entry / signature must never diverge)
+            chains.append(octave_chain(n_scales, sigma0, max_ksize,
+                                       with_next_base=carry))
+            continue
+        stages = [stencil.gaussian_stage(kz, s, tap=-1) for kz, s in taps[1:]]
+        if carry:
+            stages.append(stencil.pyr_down_stage(tap=n_scales))
+        chains.append(tuple(stages))
+    return tuple(chains)
+
+
+def _merge_octave_keypoints(dets: list, scales: list, g: Array, *,
+                            max_kp: int) -> dict:
+    """Merge per-octave detections into one fixed-capacity keypoint set:
+    map each octave's (y, x) to base-image coordinates by its cross-launch
+    scale (exact: strided taps decimate image-aligned), then take the
+    global top-`max_kp` by response across octaves."""
+    xs = jnp.concatenate([d["xy"][:, 0] * float(s[1])
+                          for d, s in zip(dets, scales)])
+    ys = jnp.concatenate([d["xy"][:, 1] * float(s[0])
+                          for d, s in zip(dets, scales)])
+    resp = jnp.concatenate([d["resp"] for d in dets])
+    scale = jnp.concatenate([d["scale"] for d in dets])
+    octave = jnp.concatenate([jnp.full(d["resp"].shape, k, jnp.int32)
+                              for k, d in enumerate(dets)])
+    # fewer candidates than capacity (kp_per_octave * n_octaves < max_kp):
+    # take what exists and pad back up — the output shape contract is
+    # fixed-capacity (max_kp) regardless of the per-octave knob
+    k_take = min(max_kp, int(resp.shape[0]))
+    top, idx = jax.lax.top_k(resp, k_take)
+    pad = max_kp - k_take
+    out = {"xy": jnp.stack([xs[idx], ys[idx]], axis=1).astype(jnp.float32),
+           "octave": octave[idx],
+           "scale": scale[idx],
+           "resp": top}
+    if pad:
+        out = {k: jnp.pad(v, ((0, pad),) + ((0, 0),) * (v.ndim - 1))
+               for k, v in out.items()}
+    out["valid"] = out["resp"] > 0.0
+    out["gray"] = g
+    return out
+
+
+def pyramid_keypoints(octaves, scales, g: Array, *, max_kp: int = 64,
+                      kp_per_octave: int | None = None,
+                      contrast_thresh: float = 0.02,
+                      edge_thresh: float = 10.0, border: int = 8) -> dict:
+    """Octave-aware DoG keypoints from prebuilt per-octave scale bands
+    (`stencil.chained_launches` output — or `ref.pyramid_ref`'s, which the
+    oracle tests feed through this same function): the 3x3x3 extremum +
+    edge tests run *per octave* with the edge-clamped borders, then
+    detections merge into base-image coordinates.
+
+    Returns dict: xy (max_kp, 2) f32 in BASE-image coordinates,
+    octave (max_kp,) i32, scale (max_kp,) i32 (ladder index within the
+    octave), resp, valid, gray (the base-resolution gray, used by
+    `describe_keypoints`)."""
+    kp_per_octave = kp_per_octave or max_kp
+    dets = []
+    for bands in octaves:
+        pyr = jnp.stack(bands)
+        dets.append(_keypoints_from_pyr(pyr, bands[0], max_kp=kp_per_octave,
+                                        contrast_thresh=contrast_thresh,
+                                        edge_thresh=edge_thresh,
+                                        border=border))
+    return _merge_octave_keypoints(dets, scales, g, max_kp=max_kp)
+
+
+def sift_pyramid(img: Array, *, n_octaves: int = 4, n_scales: int = 4,
+                 sigma0: float = 1.6, max_ksize: int = 15, max_kp: int = 64,
+                 kp_per_octave: int | None = None,
+                 contrast_thresh: float = 0.02, edge_thresh: float = 10.0,
+                 border: int = 8, vc: VectorConfig | None = None,
+                 mode: str | None = None) -> dict:
+    """Multi-octave SIFT scale-space detector — one Pallas launch PER
+    OCTAVE, chained through the `next_base` band.
+
+    Each octave's aligned ladder (base blur -> incremental Gaussian ladder
+    -> DoG taps -> pyrDown next_base) is ONE `fused_chain` launch, and
+    octave k+1's chain consumes octave k's next_base band directly
+    (`stencil.chained_launches`): an N-octave pyramid lowers to exactly N
+    `pallas_call`s.  Each launch autotunes independently for its shrinking
+    plane geometry (per-octave-shape cache keys; warm them with
+    `autotune.measure_pyramid`), and octaves whose planes fall below the
+    chain's accumulated halo run the `ref.chain_ref` fallback — identical
+    semantics, no launch (the pyramid-tail rule; `autotune.pyramid_plan`
+    reports which links launch).
+
+    `mode` selects the execution plan per launch (streaming row-carry by
+    default).  Returns the `pyramid_keypoints` dict: (octave, scale, y, x)
+    keypoints with xy mapped back to base-image coordinates."""
+    g = _normalize_gray(img)
+    chains = pyramid_chains(n_octaves, n_scales, sigma0, max_ksize)
+    outs, scales = stencil.chained_launches(g, chains, vc=vc, mode=mode)
+    return pyramid_keypoints(outs, scales, g, max_kp=max_kp,
+                             kp_per_octave=kp_per_octave,
+                             contrast_thresh=contrast_thresh,
+                             edge_thresh=edge_thresh, border=border)
+
+
 def gradients(img: Array) -> tuple[Array, Array]:
     """Central-difference magnitude/orientation (H, W) f32."""
     x = img.astype(jnp.float32)
@@ -268,7 +389,14 @@ def describe_keypoints(det: dict, *, patch: int = 16) -> dict:
     return {"desc": desc, "valid": det["valid"]}
 
 
-def sift(img: Array, *, max_kp: int = 64) -> dict:
-    det = detect_keypoints(img, max_kp=max_kp)
+def sift(img: Array, *, max_kp: int = 64, n_octaves: int = 1) -> dict:
+    """SIFT keypoints + descriptors.  n_octaves=1 is the single-octave
+    detector; n_octaves>1 routes through the multi-octave pyramid engine
+    (one fused launch per octave, `sift_pyramid`) with keypoints in
+    base-image coordinates — descriptors are sampled from the
+    base-resolution gray at the mapped-back coordinates (fixed patch; the
+    per-octave-resolution patch is future work)."""
+    det = (detect_keypoints(img, max_kp=max_kp) if n_octaves <= 1
+           else sift_pyramid(img, n_octaves=n_octaves, max_kp=max_kp))
     d = describe_keypoints(det)
     return {"xy": det["xy"], "desc": d["desc"], "valid": det["valid"], "resp": det["resp"]}

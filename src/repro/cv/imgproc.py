@@ -11,7 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.vector import VectorConfig, DEFAULT
+from repro.core.vector import VectorConfig
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels import stencil

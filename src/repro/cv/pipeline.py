@@ -33,14 +33,20 @@ class BowSvmModel:
 
 
 def extract_features(imgs: Array, *, max_kp: int = 32,
-                     preprocess: bool = False,
+                     preprocess: bool = False, n_octaves: int = 1,
                      vc: VectorConfig = DEFAULT) -> dict:
     """(B, H, W[, C]) -> stacked descriptor sets (jit + vmap over images).
 
     preprocess=True runs the fused blur -> erode -> gradient-magnitude
     denoising chain (imgproc.preprocess_bow) as a single Pallas launch over
     the whole batch before keypoint detection — one kernel launch per image
-    batch instead of one per op/channel/image."""
+    batch instead of one per op/channel/image.
+
+    n_octaves>1 routes keypoint detection through the multi-octave pyramid
+    engine (features.sift_pyramid: one fused launch per octave, chained
+    through the next_base band) so the paper's end-to-end BoW workload runs
+    on the fused path; keypoints land in base-image coordinates, so the
+    descriptor/histogram stages downstream are unchanged."""
     if preprocess:
         x = imgs.astype(jnp.float32)
         if x.ndim == 3:      # (B, H, W) gray batch: add/strip a channel axis
@@ -48,15 +54,16 @@ def extract_features(imgs: Array, *, max_kp: int = 32,
         else:
             imgs = imgproc.preprocess_bow(x, vc=vc)
     def one(img):
-        out = features.sift(img, max_kp=max_kp)
+        out = features.sift(img, max_kp=max_kp, n_octaves=n_octaves)
         return {"desc": out["desc"], "valid": out["valid"]}
     return jax.lax.map(one, imgs.astype(jnp.float32), batch_size=16)
 
 
 def train(key, imgs: Array, labels: Array, *, n_classes: int = 10, dict_size: int = 250,
-          max_kp: int = 32, preprocess: bool = False,
+          max_kp: int = 32, preprocess: bool = False, n_octaves: int = 1,
           vc: VectorConfig = DEFAULT) -> BowSvmModel:
-    feats = extract_features(imgs, max_kp=max_kp, preprocess=preprocess, vc=vc)
+    feats = extract_features(imgs, max_kp=max_kp, preprocess=preprocess,
+                             n_octaves=n_octaves, vc=vc)
     B, N, D = feats["desc"].shape
     desc = feats["desc"].reshape(B * N, D)
     wts = feats["valid"].reshape(B * N).astype(jnp.float32)
@@ -67,11 +74,13 @@ def train(key, imgs: Array, labels: Array, *, n_classes: int = 10, dict_size: in
 
 
 def predict(model: BowSvmModel, imgs: Array, *, max_kp: int = 32,
-            preprocess: bool = False, vc: VectorConfig = DEFAULT,
+            preprocess: bool = False, n_octaves: int = 1,
+            vc: VectorConfig = DEFAULT,
             timing: dict | None = None) -> Array:
     """The paper's three timed test stages."""
     t0 = time.perf_counter()
-    feats = extract_features(imgs, max_kp=max_kp, preprocess=preprocess, vc=vc)
+    feats = extract_features(imgs, max_kp=max_kp, preprocess=preprocess,
+                             n_octaves=n_octaves, vc=vc)
     jax.block_until_ready(feats["desc"])
     t1 = time.perf_counter()
     hists = bow.batch_histograms(feats["desc"], feats["valid"], model.centroids, vc=vc)

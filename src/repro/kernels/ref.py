@@ -372,6 +372,49 @@ def chain_ref(img: Array, stages):
     return outs[0] if len(outs) == 1 else outs
 
 
+def pyramid_ref(img: Array, chains) -> tuple[list, list]:
+    """Multi-octave staged oracle for `stencil.chained_launches`: run
+    `chain_ref` per link, the LAST output band of every non-final link (the
+    next_base terminal strided tap) feeding the next link as its base, with
+    per-link origin/scale tracking.
+
+    Every output band is cropped to image origin (chain_ref's contract)
+    and strided taps decimate on image-even coordinates, so link k's local
+    origin sits exactly at base-image (0, 0) and its pixel (y, x) at base
+    coordinates ``(y * scales[k][0], x * scales[k][1])`` — the scale is
+    the product of the carry taps' strides walked so far.  Returns
+    ``(outs, scales)`` shaped exactly like `stencil.chained_launches` (the
+    carry band is removed from every non-final link's tuple)."""
+    chains = tuple(tuple(c) for c in chains)
+    if not chains:
+        raise ValueError("pyramid_ref: need at least one chain")
+    outs_all, scales = [], []
+    base = img
+    sy = sx = 1
+    for k, stages in enumerate(chains):
+        last = k == len(chains) - 1
+        if not last:
+            tap = getattr(stages[-1], "tap", None)
+            stride = tuple(getattr(stages[-1], "stride", (1, 1)))
+            if tap is None or stride == (1, 1):
+                raise ValueError(
+                    f"pyramid_ref: link {k}'s final stage "
+                    f"({stages[-1].op!r}) is not a strided terminal tap — "
+                    "non-final links must emit a next_base carry band")
+        outs = chain_ref(base, stages)
+        if not isinstance(outs, tuple):
+            outs = (outs,)
+        scales.append((sy, sx))
+        if last:
+            outs_all.append(outs)
+        else:
+            outs_all.append(outs[:-1])
+            base = outs[-1]
+            st = tuple(getattr(stages[-1], "stride", (1, 1)))
+            sy, sx = sy * st[0], sx * st[1]
+    return outs_all, scales
+
+
 def bow_assign_ref(desc: Array, centroids: Array) -> tuple[Array, Array]:
     """Nearest-centroid assignment. desc (N, D) f32, centroids (K, D) f32
     -> (assignments (N,) int32, min squared distance (N,) f32)."""

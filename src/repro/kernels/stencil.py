@@ -102,7 +102,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import compat, uintr
 from repro.core.autotune import (WIDENING_OPS,  # noqa: F401  (re-export)
                                  chain_accumulated_halo, chain_iface,
-                                 chain_stream_plan, resolve_chain)
+                                 chain_stream_plan, resolve_chain,
+                                 stage_out_hw)
 from repro.core.vector import VectorConfig
 
 from . import ref
@@ -123,17 +124,10 @@ _UPSAMPLES = {"pyr_up": (2, 2)}
 _GATHER_OPS = frozenset({"warp_affine", "remap"})
 
 
-def _out_hw(op: str | None, h: int, w: int) -> tuple[int, int]:
-    """Output (h, w) of one stage applied to an (h, w) image: replicate-border
-    halo ops preserve size; pyrDown is ceil-half (OpenCV), resize2 floor,
-    pyrUp doubles exactly."""
-    if op == "pyr_down":
-        return (h + 1) // 2, (w + 1) // 2
-    if op == "resize2":
-        return h // 2, w // 2
-    if op == "pyr_up":
-        return 2 * h, 2 * w
-    return h, w
+# output (h, w) rule of one stage on an (h, w) image — the single source of
+# truth lives in core.autotune (`stage_out_hw`) so the cross-launch pyramid
+# accounting (`autotune.pyramid_plan`) and this compiler can never diverge
+_out_hw = stage_out_hw
 
 
 def _gather_halo(by: float, bx: float) -> tuple[int, int]:
@@ -340,7 +334,7 @@ def remap_stage(map_x, map_y, *, bound=None, extend=(0, 0),
     mx = jnp.asarray(map_x, jnp.float32)
     my = jnp.asarray(map_y, jnp.float32)
     if mx.ndim != 2 or mx.shape != my.shape:
-        raise ValueError(f"remap_stage: map planes must share one (H, W) "
+        raise ValueError("remap_stage: map planes must share one (H, W) "
                          f"shape, got {mx.shape} and {my.shape}")
     if bound is None:
         if isinstance(mx, jax.core.Tracer) or isinstance(my, jax.core.Tracer):
@@ -922,7 +916,7 @@ def _chain_planes(planes: Array, weights: tuple, spec: tuple,
             ny, nx = ny * stride[0], nx * stride[1]
             uy, ux = uy * up[0], ux * up[1]
     if h_fin < 1 or w_fin < 1:
-        raise ValueError(f"fused_chain: chain output is empty for a "
+        raise ValueError("fused_chain: chain output is empty for a "
                          f"{(H, W)} input (strided stages consumed it)")
     bands = _band_meta(resolved, planes.dtype)
     # per-band stride divisor below the final state scale (terminal taps)
@@ -995,7 +989,7 @@ def _chain_planes(planes: Array, weights: tuple, spec: tuple,
             else:
                 if stages[k].weights[1].shape != (h_cur, w_cur):
                     raise ValueError(
-                        f"remap stage: map planes are "
+                        "remap stage: map planes are "
                         f"{stages[k].weights[1].shape}, but the image at "
                         f"this stage is {(h_cur, w_cur)}")
                 req_y = st[0] + max(0, -min_y, max_y - (h_cur - 1))
@@ -1008,7 +1002,7 @@ def _chain_planes(planes: Array, weights: tuple, spec: tuple,
                     f"over rows [{min_y}, {max_y}] x cols [{min_x}, "
                     f"{max_x}], needing displacement ({req_y:.2f}, "
                     f"{req_x:.2f}) — declare it via bound=/extend= "
-                    f"(downstream stages consume the halo ring)")
+                    "(downstream stages consume the halo ring)")
         elif op == "pyr_up":
             _, off_o, r_o = iface[k + 1]
             metas.append((off_o - 2 * off_k - 2, r_o))
@@ -1145,6 +1139,29 @@ def _respec(spec, weights) -> tuple[Stage, ...]:
     return tuple(out)
 
 
+# forced default execution plan (the CI mode matrix): when set, auto-mode
+# callers run this plan instead of consulting the measured cache / halo
+# heuristic.  tests/conftest.py sets it from the REPRO_FUSED_MODE env var so
+# one test job can pin the whole suite to one plan; explicit mode= arguments
+# always win over the default.
+_DEFAULT_MODE: str | None = None
+
+
+def set_default_chain_mode(mode: str | None) -> str | None:
+    """Force the plan auto-mode `fused_chain` calls run ("streaming" |
+    "window" | "ref"), or None to restore cache-then-heuristic routing.
+    Returns the previous default (so callers can save/restore)."""
+    global _DEFAULT_MODE
+    if mode is not None and mode not in ("streaming", "window", "ref"):
+        raise ValueError(f"set_default_chain_mode: unknown mode {mode!r}")
+    prev, _DEFAULT_MODE = _DEFAULT_MODE, mode
+    return prev
+
+
+def default_chain_mode() -> str | None:
+    return _DEFAULT_MODE
+
+
 def fused_chain(img: Array, stages, *, vc: VectorConfig | None = None,
                 mode: str | None = None):
     """Run a stage chain over an image in ONE Pallas launch.
@@ -1188,11 +1205,14 @@ def fused_chain(img: Array, stages, *, vc: VectorConfig | None = None,
     if h_in <= ph_in or w_in <= pw_in:
         return ref.chain_ref(img, stages)
     if mode in (None, "auto"):
-        from repro.core.autotune import cached_chain_mode
-        mode = cached_chain_mode(stages, img.shape, img.dtype, vc)
-        if mode is None:
-            # heuristic: carry rows whenever there is row halo to carry
-            mode = "streaming" if ph_in > 0 else "window"
+        if _DEFAULT_MODE is not None:       # CI mode-matrix override
+            mode = _DEFAULT_MODE
+        else:
+            from repro.core.autotune import cached_chain_mode
+            mode = cached_chain_mode(stages, img.shape, img.dtype, vc)
+            if mode is None:
+                # heuristic: carry rows whenever there is row halo to carry
+                mode = "streaming" if ph_in > 0 else "window"
     if mode == "ref":
         return _chain_ref_planes(img, _flat_weights(stages), _spec_of(stages))
     if mode not in ("streaming", "window"):
@@ -1222,3 +1242,78 @@ def fused_chain(img: Array, stages, *, vc: VectorConfig | None = None,
         outs = tuple(jnp.moveaxis(o.reshape(B, C, *o.shape[1:]), 1, -1)
                      for o in outs)
     return outs[0] if len(outs) == 1 else outs
+
+
+# ---------------------------------------------------------------------------
+# Cross-launch chain composition: the next_base terminal-tap contract
+# ---------------------------------------------------------------------------
+
+def validate_next_base(stages) -> int:
+    """Check the next_base terminal-tap contract and return the carry band.
+
+    A chain that feeds a *subsequent* `fused_chain` launch (a pyramid link)
+    must end with a strided terminal tap — e.g. `pyr_down_stage(tap=...)` —
+    so its LAST output band is the downsampled base of the next launch
+    while the full-resolution bands stay pyramid products.  The terminal
+    position is already enforced by `resolve_chain` (geometry-changing taps
+    are terminal); this adds the cross-launch requirement that such a tap
+    exists at all.  Returns the carry band's index in the chain's output
+    tuple (always the last band)."""
+    resolved = resolve_chain(stages)
+    op, mode, halo, stride, up, n_in, n_out, tap = resolved[-1]
+    if mode != "tap" or stride == (1, 1):
+        raise ValueError(
+            f"next_base contract: the final stage ({op!r}, mode {mode!r}, "
+            f"stride {stride}) is not a strided terminal tap — a pyramid "
+            "link must end with e.g. pyr_down_stage(tap=...) so its last "
+            "output band is the next launch's base")
+    return n_out - 1
+
+
+def chained_launches(img: Array, chains, *, vc: VectorConfig | None = None,
+                     mode: str | None = None) -> tuple[list, list]:
+    """Cross-launch chain composition: one `fused_chain` launch per link,
+    where link k+1 consumes link k's final output band (the `next_base`
+    terminal strided tap, see `validate_next_base`) as its input — an
+    N-link pyramid lowers to exactly N `pallas_call`s, with band state,
+    autotune keys and coordinate origins handed off *across* launches
+    instead of within one.
+
+    Every non-final link must satisfy the next_base contract; its carry
+    band is removed from that link's returned tuple (it is the next
+    launch's input, not a pyramid product).  Each launch autotunes
+    independently: `vc=None` re-picks the block width for the link's
+    (shrinking) plane geometry, and `mode=None` consults the measured-mode
+    cache under the link's own shape key (`autotune.measure_pyramid` warms
+    one entry per link).  Links whose planes fall below their chain's
+    accumulated halo run the `ref.chain_ref` fallback (identical
+    semantics, no launch) — the pyramid-tail rule.
+
+    Returns ``(outs, scales)``: ``outs[k]`` is link k's output-band tuple
+    and ``scales[k]`` the (row, col) base-coordinate scale of link k —
+    pixel (y, x) of link k sits at base-image coordinates
+    ``(y * scales[k][0], x * scales[k][1])``, exact because strided taps
+    decimate on image-aligned (even) coordinates and every output band is
+    cropped to image origin."""
+    chains = tuple(tuple(c) for c in chains)
+    if not chains:
+        raise ValueError("chained_launches: need at least one chain")
+    outs_all, scales = [], []
+    base = img
+    sy = sx = 1
+    for k, stages in enumerate(chains):
+        last = k == len(chains) - 1
+        if not last:
+            validate_next_base(stages)
+        outs = fused_chain(base, stages, vc=vc, mode=mode)
+        if not isinstance(outs, tuple):
+            outs = (outs,)
+        scales.append((sy, sx))
+        if last:
+            outs_all.append(outs)
+        else:
+            outs_all.append(outs[:-1])
+            base = outs[-1]
+            st = tuple(stages[-1].stride)
+            sy, sx = sy * st[0], sx * st[1]
+    return outs_all, scales

@@ -8,6 +8,15 @@ import pytest
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 sys.path.insert(0, os.path.abspath(SRC))
 
+# CI mode matrix: REPRO_FUSED_MODE={streaming,window,ref} pins every
+# auto-mode fused_chain call in the suite to one execution plan (explicit
+# mode= arguments in tests still win), so each matrix job exercises one
+# plan end to end.  Unset = the library's cache-then-heuristic routing.
+_FORCED_MODE = os.environ.get("REPRO_FUSED_MODE")
+if _FORCED_MODE:
+    from repro.kernels import stencil as _stencil
+    _stencil.set_default_chain_mode(_FORCED_MODE)
+
 
 def run_subprocess(code: str, *, devices: int = 8, timeout: int = 900) -> str:
     """Run `code` in a fresh python with N virtual devices (host platform).

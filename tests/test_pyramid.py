@@ -1,0 +1,214 @@
+"""Multi-octave SIFT pyramid engine (ISSUE 5 tentpole): cross-launch chain
+composition through the `next_base` terminal tap.
+
+The contract under test: an N-octave pyramid lowers to exactly N
+`pallas_call`s (one fused launch per octave), octave k+1's chain consumes
+octave k's next_base band directly, streaming and window plans are
+bit-identical, the per-octave staged `ref.pyramid_ref` oracle agrees within
+the repo's oracle tolerance (the Gaussian FMA-vs-sum f32 ulp), and the
+*keypoints* — the discrete (octave, scale, y, x) set mapped to base-image
+coordinates — are bit-identical between the fused pyramid and the oracle.
+Planes at the pyramid tail that fall below the accumulated halo route to
+the chain_ref fallback (no launch, same semantics)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune
+from repro.core.vector import VectorConfig
+from repro.cv import features
+from repro.kernels import ref, stencil
+
+N_SCALES = 2            # keeps the ladder halo small enough for test images
+
+
+def _rng():
+    # private stream: these tests must not consume the session-scoped rng
+    # fixture (the pre-existing suite's random data would shift)
+    return np.random.default_rng(1234)
+
+
+def _gray(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+def _chains(n_octaves):
+    return features.pyramid_chains(n_octaves, n_scales=N_SCALES)
+
+
+def test_pyramid_matches_staged_oracle():
+    """Fused per-octave launches vs the staged per-octave chain_ref oracle:
+    band-for-band agreement at the oracle tolerance, identical shapes, and
+    identical cross-launch coordinate scales."""
+    g = _gray(_rng(), (160, 152))
+    chains = _chains(3)
+    outs, scales = stencil.chained_launches(g, chains, mode="streaming")
+    want, want_scales = ref.pyramid_ref(g, chains)
+    assert scales == want_scales == [(1, 1), (2, 2), (4, 4)]
+    assert [len(o) for o in outs] == [len(w) for w in want] == [N_SCALES + 3] * 3
+    for a, b in zip(outs, want):
+        for x, y in zip(a, b):
+            assert x.shape == y.shape and x.dtype == y.dtype
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=2e-5, atol=2e-3)
+
+
+def test_pyramid_streaming_equals_window():
+    """The PR-4 invariant holds across launches: both pallas plans are
+    bit-identical for every octave band."""
+    g = _gray(_rng(), (160, 152))
+    chains = _chains(3)
+    s, _ = stencil.chained_launches(g, chains, mode="streaming")
+    w, _ = stencil.chained_launches(g, chains, mode="window")
+    for a, b in zip(s, w):
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("mode", ["streaming", "window"])
+def test_pyramid_launch_count(mode):
+    """N octaves -> exactly N pallas_calls (the tentpole guarantee), in
+    both execution plans, through the full sift_pyramid entry point."""
+    g = _gray(_rng(), (160, 152))
+    n = stencil.count_pallas_calls(
+        lambda x: features.sift_pyramid(x, n_octaves=3, n_scales=N_SCALES,
+                                        mode=mode)["xy"], g)
+    assert n == 3
+
+
+def test_pyramid_keypoints_bit_identical_to_oracle():
+    """The acceptance gate: the discrete keypoint set — (octave, scale,
+    y, x) mapped back to base-image coordinates, plus validity — is
+    bit-identical between the fused pyramid and the per-octave staged
+    chain_ref oracle; responses agree at the oracle tolerance."""
+    g = _gray(_rng(), (160, 152))
+    chains = _chains(3)
+    outs, scales = stencil.chained_launches(g, chains, mode="streaming")
+    r_outs, r_scales = ref.pyramid_ref(g, chains)
+    det = features.pyramid_keypoints(outs, scales, g, max_kp=32)
+    want = features.pyramid_keypoints(r_outs, r_scales, g, max_kp=32)
+    assert bool(det["valid"].sum()) > 0, "test image detected no keypoints"
+    for k in ("xy", "octave", "scale", "valid"):
+        np.testing.assert_array_equal(np.asarray(det[k]), np.asarray(want[k]))
+    np.testing.assert_allclose(np.asarray(det["resp"]),
+                               np.asarray(want["resp"]), rtol=2e-5, atol=1e-6)
+
+
+def test_pyramid_keypoints_base_coordinates():
+    """Octave-k keypoints land at 2^k-scaled base coordinates and stay
+    inside the base image."""
+    g = _gray(_rng(), (160, 152))
+    det = features.sift_pyramid(g, n_octaves=3, n_scales=N_SCALES, max_kp=32)
+    xy = np.asarray(det["xy"])
+    octv = np.asarray(det["octave"])
+    valid = np.asarray(det["valid"])
+    assert valid.any()
+    for i in np.flatnonzero(valid):
+        s = 2.0 ** octv[i]
+        assert xy[i, 0] % s == 0 and xy[i, 1] % s == 0
+        assert 0 <= xy[i, 0] < g.shape[1] and 0 <= xy[i, 1] < g.shape[0]
+
+
+def test_pyramid_tail_chain_ref_fallback():
+    """Octaves whose planes fall below the accumulated halo run the
+    chain_ref fallback: fewer launches, identical semantics, and
+    `autotune.pyramid_plan` predicts exactly which links launch."""
+    g = _gray(_rng(), (120, 120))
+    chains = _chains(4)                   # 120 -> 60 -> 30 -> 15
+    plan = autotune.pyramid_plan(chains, g.shape)
+    assert [p["shape"] for p in plan] == \
+        [(120, 120), (60, 60), (30, 30), (15, 15)]
+    n_launch = sum(not p["fallback"] for p in plan)
+    assert 0 < n_launch < len(chains)     # a real tail exists
+    got = stencil.count_pallas_calls(
+        lambda x: stencil.chained_launches(x, chains, mode="streaming")[0], g)
+    assert got == n_launch
+    outs, _ = stencil.chained_launches(g, chains, mode="streaming")
+    want, _ = ref.pyramid_ref(g, chains)
+    for a, b in zip(outs, want):
+        for x, y in zip(a, b):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=2e-5, atol=2e-3)
+
+
+def test_pyramid_plan_accounts_shrinking_planes():
+    """The working-set rule re-picks the block width per link: a link's
+    lmul never decreases as the planes shrink down the pyramid."""
+    chains = _chains(4)
+    plan = autotune.pyramid_plan(chains, (2048, 2048))
+    lmuls = [p["lmul"] for p in plan if not p["fallback"]]
+    assert lmuls == sorted(lmuls)
+    assert all(p["halo"][0] > 0 for p in plan)
+
+
+def test_next_base_contract_enforced():
+    """A non-final link without a strided terminal tap violates the
+    next_base contract and raises instead of silently mis-chaining."""
+    g = _gray(_rng(), (96, 96))
+    no_carry = features.octave_chain(N_SCALES, with_next_base=False)
+    with pytest.raises(ValueError, match="next_base"):
+        stencil.chained_launches(g, (no_carry, no_carry))
+    with pytest.raises(ValueError, match="next_base"):
+        ref.pyramid_ref(g, (no_carry, no_carry))
+
+
+def test_measure_pyramid_warms_per_octave_keys():
+    """measure_pyramid installs one measured-mode cache entry per
+    launching link, keyed by that link's own (shrinking) shape, and marks
+    the pyramid tail as structural fallback without timing it."""
+    g = _gray(_rng(), (120, 120))
+    chains = _chains(4)
+    autotune.clear_mode_cache()
+    try:
+        entries = autotune.measure_pyramid(g, chains, n=1, persist=False)
+        assert len(entries) == 4
+        assert [e.get("fallback", False) for e in entries] == \
+            [False, False, True, True]
+        h = w = 120
+        for k, ch in enumerate(chains):
+            cached = autotune.cached_chain_mode(ch, (h, w), jnp.float32, None)
+            if entries[k].get("fallback"):
+                assert cached is None        # nothing measured for the tail
+            else:
+                assert cached == entries[k]["mode"]
+            h, w = (h + 1) // 2, (w + 1) // 2
+    finally:
+        autotune.clear_mode_cache()
+
+
+def test_pyramid_respects_explicit_vc():
+    """vc= pins the block width across every launch (the lmul knob stays
+    available on the cross-launch path)."""
+    g = _gray(_rng(), (160, 152))
+    chains = _chains(2)
+    a, _ = stencil.chained_launches(g, chains, vc=VectorConfig(lmul=1),
+                                    mode="streaming")
+    b, _ = stencil.chained_launches(g, chains, vc=VectorConfig(lmul=4),
+                                    mode="streaming")
+    for x, y in zip(a[0] + a[1], b[0] + b[1]):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_sift_pyramid_descriptor_path():
+    """features.sift(n_octaves>1) routes the BoW descriptor extraction
+    through the pyramid: fixed-capacity output shapes, descriptors only on
+    valid keypoints."""
+    g = _gray(_rng(), (160, 152))
+    out = features.sift(g, max_kp=16, n_octaves=3)
+    assert out["desc"].shape == (16, 128)
+    assert out["xy"].shape == (16, 2)
+    d = np.asarray(out["desc"])
+    v = np.asarray(out["valid"])
+    assert (np.linalg.norm(d[~v], axis=1) == 0).all()
+    if v.any():
+        assert (np.linalg.norm(d[v], axis=1) > 0.5).all()
+
+
+def test_pyramid_kp_per_octave_below_capacity():
+    """kp_per_octave * n_octaves < max_kp must pad back to the fixed
+    max_kp capacity (invalid tail), not crash top_k."""
+    g = _gray(_rng(), (160, 152))
+    det = features.sift_pyramid(g, n_octaves=2, n_scales=N_SCALES,
+                                max_kp=64, kp_per_octave=16)
+    assert det["xy"].shape == (64, 2) and det["resp"].shape == (64,)
+    assert not bool(det["valid"][32:].any())
