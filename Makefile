@@ -1,7 +1,8 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test lint bench-quick bench pipeline-bench perf-gate autotune-cache
+.PHONY: test lint bench-quick bench pipeline-bench perf-gate autotune-cache \
+        serve-smoke serve-bench chaos-test
 
 # MODE=streaming|window|both selects the fused-chain execution plan(s)
 # the pipeline benches time (default both; see kernels/stencil.py modes)
@@ -30,3 +31,18 @@ perf-gate:       ## fail on perf regressions vs BENCH_results.json history
 
 autotune-cache:  ## inspect the measured chain-mode cache
 	python -m repro.core.autotune --show-cache
+
+# FAULT_SPEC seeds the deterministic fault registry (core/faultinject.py);
+# empty = fault-free.  The chaos CI cell runs both targets with every
+# fault class active and requires zero unhandled exceptions.
+FAULT_SPEC ?=
+
+serve-smoke:     ## serving-engine smoke workload (honors FAULT_SPEC)
+	REPRO_FAULT_SPEC="$(FAULT_SPEC)" python -m repro.serve.cv_engine --smoke
+
+chaos-test:      ## fault suite under injection (the chaos CI cell)
+	REPRO_FAULT_SPEC="$(FAULT_SPEC)" python -m pytest -x -q \
+		tests/test_faultinject.py tests/test_plan_table.py tests/test_serve_cv.py
+
+serve-bench:     ## serving throughput benchmark (appends to BENCH_results.json)
+	python -m benchmarks.serve_bench

@@ -1,0 +1,91 @@
+"""Serving-throughput benchmark: `CvEngine.extract` over CIFAR-like frames.
+
+Measures end-to-end images/sec through the fault-tolerant serving engine
+(admission -> bucketing/padding -> batched ladder execution) at the
+paper's 32x32 serving bucket, and the engine's overhead against calling
+`pipeline.extract_features` directly on the same pre-batched frames —
+the price of the robustness layer (admission checks, bucket grouping,
+per-request Response assembly) when no fault fires.
+
+Rows land under bench key "serve" in BENCH_results.json; the perf gate
+only inspects the "pipeline" + ladder benches, so these rows are
+history-tracked but not (yet) gated.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.cv import pipeline
+from repro.data.synthetic import ImageStream
+from repro.serve.cv_engine import CvEngine
+
+from .common import best_of, flush_results, print_table, record_result
+
+BUCKET = (32, 32)
+MAX_KP = 16
+
+
+def _workload(n: int):
+    imgs, _ = ImageStream(seed=3).batch(n, split="serve")
+    return [np.asarray(f) for f in imgs]
+
+
+def run(quick: bool = False) -> list[dict]:
+    batches = (64,) if quick else (64, 256)
+    rows = []
+    for n in batches:
+        work = _workload(n)
+        eng = CvEngine(buckets=(BUCKET,), max_batch=64, max_kp=MAX_KP)
+
+        def serve(_x=None, work=work, eng=eng):
+            res = eng.extract(work)
+            assert all(r.ok for r in res)
+            return res
+
+        def direct(_x=None, work=work):
+            # same 64-frame batching policy as the engine, so the delta
+            # isolates admission/bucketing/Response overhead, not batch shape
+            outs = []
+            for lo in range(0, len(work), 64):
+                batch = np.stack(work[lo : lo + 64])
+                feats = pipeline.extract_features(batch, max_kp=MAX_KP, mode="streaming")
+                outs.append(np.asarray(feats["desc"]))
+            return outs
+
+        serve_s = best_of(serve, None, n=3)
+        direct_s = best_of(direct, None, n=3)
+        res = serve(None)
+        row = {
+            "batch": n,
+            "case": "serve_extract",
+            "resolution": f"{BUCKET[0]}x{BUCKET[1]}",
+            "images_per_s": round(n / serve_s, 2),
+            "serve_best_s": round(serve_s, 4),
+            "direct_best_s": round(direct_s, 4),
+            "engine_overhead_pct": round(100.0 * (serve_s - direct_s) / direct_s, 1),
+            "plan": res[0].plan,
+            "degraded": sum(r.degraded for r in res),
+        }
+        rows.append(row)
+        record_result("serve", row)
+    headers = ["batch", "images/s", "serve_s", "direct_s", "overhead%", "plan"]
+    table = [
+        [r["batch"], r["images_per_s"], r["serve_best_s"], r["direct_best_s"],
+         r["engine_overhead_pct"], r["plan"]]
+        for r in rows
+    ]
+    print_table("Serving throughput (CvEngine.extract, bucket 32x32)", headers, table)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)
+    out = flush_results()
+    if out:
+        print(f"\nresults -> {out}")

@@ -16,15 +16,18 @@ measured-timing fallback (`measure_chain`) that picks the cheapest of the
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import time
+import warnings
 from dataclasses import dataclass
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
+from . import faultinject
 from .vector import VectorConfig
 
 LMULS = (8, 4, 2, 1)
@@ -443,17 +446,140 @@ def _cache_key(stages, shape, dtype, vc) -> str:
             f"|{jnp.dtype(dtype).name}|{_vc_tag(vc)}|{jax.default_backend()}")
 
 
+# -- versioned plan-table artifact -------------------------------------------
+#
+# The on-disk cache is a *plan table*: a shippable artifact whose entries
+# route production traffic (REPRO_AUTOTUNE_CACHE_READ=1).  Every entry is
+# sealed with the schema version and a content checksum; anything that
+# fails validation is quarantined to `<cache>.corrupt-*` with a visible
+# PlanTableWarning — a corrupt or stale plan must never crash the reader
+# and must never silently win a routing decision.
+
+PLAN_SCHEMA_VERSION = 1
+
+
+class PlanTableWarning(UserWarning):
+    """Visible signal that a plan-table file or entry was quarantined."""
+
+
+class MeasureTimeout(RuntimeError):
+    """measure_chain exceeded its deadline (or an injected timeout fired)."""
+
+
+def _entry_checksum(key: str, core: dict) -> str:
+    blob = json.dumps({"key": key, "v": PLAN_SCHEMA_VERSION,
+                       "mode": core["mode"], "times": core["times"]},
+                      sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def seal_entry(key: str, core: dict) -> dict:
+    """Wrap a core ``{"mode", "times"}`` measurement for the plan table."""
+    core = {"mode": core["mode"], "times": dict(core["times"])}
+    return {**core, "v": PLAN_SCHEMA_VERSION,
+            "sum": _entry_checksum(key, core)}
+
+
+def _quarantine_name(path: str) -> str:
+    return f"{path}.corrupt-{time.strftime('%Y%m%d-%H%M%S')}-{os.getpid()}"
+
+
+def _quarantine(path: str, payload: str, reason: str) -> None:
+    """Move the offending bytes aside and warn; never raise."""
+    dest = _quarantine_name(path)
+    try:
+        with open(dest, "w") as f:
+            f.write(payload)
+    except OSError:
+        dest = "<unwritable>"
+    warnings.warn(f"plan table {path}: {reason}; quarantined to {dest}",
+                  PlanTableWarning, stacklevel=3)
+
+
+def load_plan_table(path: str | None = None, *,
+                    quarantine: bool = True) -> dict[str, dict]:
+    """Read + validate the plan table; returns {key: {"mode", "times"}}.
+
+    Whole-file damage (unreadable JSON, non-dict top level) quarantines
+    the file itself; per-entry damage (schema-version mismatch, checksum
+    mismatch, missing fields) quarantines just those entries while the
+    valid remainder is returned.  ``quarantine=False`` (inspection mode)
+    drops invalid entries without touching the filesystem."""
+    path = path or cache_path()
+    try:
+        with open(path) as f:
+            text = f.read()
+    except OSError:
+        return {}
+    text, _ = faultinject.corrupt_text(text, site=f"plan_table:{path}")
+    try:
+        raw = json.loads(text)
+        if not isinstance(raw, dict):
+            raise json.JSONDecodeError("top level is not an object", text, 0)
+    except json.JSONDecodeError as e:
+        if quarantine:
+            _quarantine(path, text, f"unreadable JSON ({e.msg})")
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            faultinject.record_degradation(
+                stage="plan_table", from_plan=path, to_plan="empty",
+                reason=f"unreadable JSON: {e.msg}")
+        return {}
+    good, bad = {}, {}
+    for key, entry in raw.items():
+        ok = (isinstance(entry, dict)
+              and entry.get("v") == PLAN_SCHEMA_VERSION
+              and isinstance(entry.get("mode"), str)
+              and isinstance(entry.get("times"), dict))
+        if ok:
+            core = {"mode": entry["mode"], "times": entry["times"]}
+            ok = entry.get("sum") == _entry_checksum(key, core)
+        if ok:
+            good[key] = core
+        else:
+            bad[key] = entry
+    if bad and quarantine:
+        _quarantine(path, json.dumps(bad, indent=1, sort_keys=True),
+                    f"{len(bad)} invalid entr{'y' if len(bad) == 1 else 'ies'}"
+                    " (schema/checksum mismatch)")
+        faultinject.record_degradation(
+            stage="plan_table", from_plan=path, to_plan="valid-subset",
+            reason=f"{len(bad)} entries quarantined",
+            detail=";".join(list(bad)[:3]))
+        save_plan_table(good, path)        # rewrite with only valid entries
+    return good
+
+
+def save_plan_table(entries: dict[str, dict], path: str | None = None) -> bool:
+    """Atomically write sealed entries; OSError warns instead of raising."""
+    path = path or cache_path()
+    sealed = {k: seal_entry(k, v) for k, v in entries.items()}
+    tmp = f"{path}.tmp-{os.getpid()}"
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(tmp, "w") as f:
+            json.dump(sealed, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        return True
+    except OSError as e:
+        warnings.warn(f"plan table {path}: write failed ({e})",
+                      PlanTableWarning, stacklevel=2)
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        return False
+
+
 def _load_disk_cache() -> None:
     global _DISK_CACHE_LOADED
     _DISK_CACHE_LOADED = True
     if os.environ.get("REPRO_AUTOTUNE_CACHE_READ") != "1":
         return
-    try:
-        with open(cache_path()) as f:
-            for k, v in json.load(f).items():
-                _MODE_CACHE.setdefault(k, v)
-    except (OSError, json.JSONDecodeError):
-        pass
+    for k, v in load_plan_table().items():
+        _MODE_CACHE.setdefault(k, v)
 
 
 def cached_chain_entry(stages, shape, dtype,
@@ -478,20 +604,38 @@ def clear_mode_cache() -> None:
 
 
 def measure_chain(img, stages, *, vc: VectorConfig | None = None,
-                  n: int = 3, modes=CHAIN_MODES, persist: bool = True) -> dict:
+                  n: int = 3, modes=CHAIN_MODES, persist: bool = True,
+                  deadline_s: float | None = None, watchdog=None) -> dict:
     """Time the execution-plan candidates on a concrete input and cache the
     winner: streaming (row-carry rings), window (overlapping-window
     recompute) and ref (the staged `ref.chain_ref` jnp path — the cheapest
     plan for small single-stage chains on CPU backends).  Returns
     ``{"mode": winner, "times": {mode: best_s}}`` and records it so
-    `fused_chain(mode=None)` routes this chain automatically."""
+    `fused_chain(mode=None)` routes this chain automatically.
+
+    ``deadline_s`` bounds the whole measurement: once exceeded, remaining
+    candidates are skipped and the winner is picked from what was timed
+    (MeasureTimeout if nothing was).  ``watchdog`` (a
+    ``train.fault.StragglerWatchdog``) gets one ``.step`` per candidate;
+    stragglers are recorded as measure_chain degradation events."""
     from repro.kernels import stencil
 
+    if faultinject.should_fire("measure_timeout", site="measure_chain"):
+        raise MeasureTimeout("injected measure_timeout before any candidate")
     stages = tuple(stages)
-    times, last_err = {}, None
-    for mode in modes:
+    key = _cache_key(stages, img.shape, img.dtype, vc)
+    t_start = time.perf_counter()
+    times, last_err, skipped = {}, None, []
+    for i, mode in enumerate(modes):
+        # the deadline gates candidates 1.. — the first always gets its shot
+        # (a winner needs at least one measurement to exist)
+        if i and deadline_s is not None \
+                and time.perf_counter() - t_start > deadline_s:
+            skipped = list(modes[i:])
+            break
         fn = jax.jit(lambda x, m=mode: stencil.fused_chain(
             x, stages, vc=vc, mode=m))
+        t_cand = time.perf_counter()
         try:
             jax.block_until_ready(fn(img))                   # compile + warm
         except ValueError:
@@ -508,26 +652,30 @@ def measure_chain(img, stages, *, vc: VectorConfig | None = None,
             jax.block_until_ready(fn(img))
             best = min(best, time.perf_counter() - t0)
         times[mode] = best
+        if watchdog is not None and watchdog.step(
+                i, time.perf_counter() - t_cand):
+            faultinject.record_degradation(
+                stage="measure_chain", from_plan=mode, to_plan=mode,
+                reason="straggler candidate (watchdog alarm)", detail=key)
     if not times:
+        if skipped:
+            raise MeasureTimeout(
+                f"measure_chain: deadline {deadline_s}s hit before any "
+                f"candidate ran ({skipped})")
         raise RuntimeError("measure_chain: no candidate plan ran") from last_err
+    if skipped:
+        faultinject.record_degradation(
+            stage="measure_chain", from_plan="+".join(skipped),
+            to_plan="measured-subset",
+            reason=f"deadline {deadline_s}s exceeded", detail=key)
     winner = min(times, key=times.get)
     entry = {"mode": winner,
              "times": {k: round(v, 6) for k, v in times.items()}}
-    key = _cache_key(stages, img.shape, img.dtype, vc)
     _MODE_CACHE[key] = entry
     if persist:
-        path = cache_path()
-        try:
-            os.makedirs(os.path.dirname(path), exist_ok=True)
-            disk = {}
-            if os.path.exists(path):
-                with open(path) as f:
-                    disk = json.load(f)
-            disk[key] = entry
-            with open(path, "w") as f:
-                json.dump(disk, f, indent=1, sort_keys=True)
-        except (OSError, json.JSONDecodeError):
-            pass
+        disk = load_plan_table()
+        disk[key] = entry
+        save_plan_table(disk)
     return entry
 
 
@@ -568,12 +716,10 @@ def measure_pyramid(img, chains, *, vc: VectorConfig | None = None,
 
 def _show_cache() -> None:
     path = cache_path()
-    print(f"# chain-mode autotune cache: {path}")
-    disk = {}
-    try:
-        with open(path) as f:
-            disk = json.load(f)
-    except (OSError, json.JSONDecodeError):
+    print(f"# chain-mode autotune cache: {path} "
+          f"(plan-table schema v{PLAN_SCHEMA_VERSION})")
+    disk = load_plan_table(quarantine=False)   # inspection: no file moves
+    if not disk:
         print("(no persisted cache)")
     for k, v in sorted({**disk, **_MODE_CACHE}.items()):
         times = "  ".join(f"{m}={t:.4g}s" for m, t in v["times"].items())

@@ -1,0 +1,285 @@
+"""Deterministic fault-injection harness + degradation-event log.
+
+Two halves, one module, zero heavy deps (this sits under everything —
+autotune, the stencil IR, the CV layer and the serving engine all import
+it, so it must import nothing above ``core``):
+
+  * **Fault registry** — a set of named fault classes, each with a seeded
+    firing schedule, installed either programmatically (``configure`` /
+    ``inject``) or from the ``REPRO_FAULT_SPEC`` environment variable
+    (the chaos CI cell sets it).  Every firing decision is a pure
+    function of ``(seed, kind, per-kind call counter)`` — replaying the
+    same program replays the same faults, which is what makes the chaos
+    suite assertable rather than flaky.
+
+  * **Degradation-event log** — a bounded, process-wide record of every
+    "planned path failed, took the next rung" decision (degradation
+    ladder in ``fused_chain``, plan-table quarantine, serving-engine
+    retries/deadlines).  Structured events instead of log lines so tests
+    and the serving engine can assert on them.
+
+Fault taxonomy (``FAULT_KINDS``):
+
+  cache_corrupt   plan-table (autotune disk cache) text is mangled on read
+  lowering_error  fused_chain raises from inside the pallas lowering path
+  measure_timeout measure_chain raises MeasureTimeout before timing
+  nan_input       float input frames get NaN/Inf poisoned at seeded spots
+  bucket_miss     the serving engine's bucket lookup pretends not to fit
+
+Spec grammar (``REPRO_FAULT_SPEC``)::
+
+    kind[:k=v[,k=v...]][;kind2[:...]...]
+
+    e.g.  "lowering_error:p=0.5,seed=11;cache_corrupt;nan_input:count=2"
+
+Per-kind knobs: ``p`` (firing probability per eligible call, default 1),
+``count`` (max total firings, default unlimited), ``after`` (skip the
+first N eligible calls), ``seed`` (stream seed, default 0).
+"""
+from __future__ import annotations
+
+import collections
+import os
+import random
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+FAULT_KINDS = (
+    "cache_corrupt",
+    "lowering_error",
+    "measure_timeout",
+    "nan_input",
+    "bucket_miss",
+)
+
+ENV_VAR = "REPRO_FAULT_SPEC"
+
+
+class InjectedFault(RuntimeError):
+    """Raised (or recorded) when a configured fault fires.
+
+    Deliberately a RuntimeError subclass: the degradation ladder treats it
+    like any other runtime failure of a rung — nothing in the library is
+    allowed to special-case "this was only a drill"."""
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    kind: str
+    p: float = 1.0
+    count: int | None = None
+    after: int = 0
+    seed: int = 0
+
+
+def parse_spec(text: str | None) -> dict[str, FaultSpec]:
+    """Parse the REPRO_FAULT_SPEC grammar into {kind: FaultSpec}.
+
+    Unknown kinds or malformed knobs raise ValueError — a chaos run with
+    a typo'd spec should fail loudly, not silently run fault-free."""
+    specs: dict[str, FaultSpec] = {}
+    if not text or not text.strip():
+        return specs
+    for part in text.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        kind, _, knobs = part.partition(":")
+        kind = kind.strip()
+        if kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {kind!r}; expected one of {FAULT_KINDS}")
+        kw: dict = {}
+        if knobs.strip():
+            for item in knobs.split(","):
+                k, _, v = item.partition("=")
+                k = k.strip()
+                if k == "p":
+                    kw["p"] = float(v)
+                elif k in ("count", "after", "seed"):
+                    kw[k] = int(v)
+                else:
+                    raise ValueError(f"unknown fault knob {k!r} in {part!r}")
+        specs[kind] = FaultSpec(kind=kind, **kw)
+    return specs
+
+
+class FaultRegistry:
+    """Active fault set + deterministic per-kind firing streams."""
+
+    def __init__(self, specs: dict[str, FaultSpec]):
+        self.specs = dict(specs)
+        self._calls: collections.Counter = collections.Counter()
+        self._fires: collections.Counter = collections.Counter()
+        self.fired: list[tuple[str, str]] = []  # (kind, site) history
+
+    def should_fire(self, kind: str, site: str = "") -> bool:
+        """One eligible call of fault class `kind` at `site`: fire or not.
+
+        Deterministic: the decision depends only on the spec and on how
+        many eligible calls of this kind came before (not on wall clock,
+        threads, or site strings)."""
+        spec = self.specs.get(kind)
+        if spec is None:
+            return False
+        n = self._calls[kind]
+        self._calls[kind] += 1
+        if n < spec.after:
+            return False
+        if spec.count is not None and self._fires[kind] >= spec.count:
+            return False
+        if spec.p < 1.0:
+            # str seed: sha512-based, stable across runs/versions (tuple
+            # seeds go through hash() and are deprecated)
+            roll = random.Random(f"{spec.seed}:{kind}:{n}").random()
+            if roll >= spec.p:
+                return False
+        self._fires[kind] += 1
+        self.fired.append((kind, site))
+        return True
+
+    def fire_count(self, kind: str) -> int:
+        return self._fires[kind]
+
+
+# -- module state: lazily installed from the environment ---------------------
+_REGISTRY: FaultRegistry | None = None
+_ENV_CONSULTED = False
+
+
+def configure(spec: str | dict[str, FaultSpec] | None) -> FaultRegistry | None:
+    """Install a fault registry (str spec, parsed dict, or None = clear).
+
+    Returns the new registry (None when cleared).  Overrides any spec
+    from the environment for the rest of the process."""
+    global _REGISTRY, _ENV_CONSULTED
+    _ENV_CONSULTED = True
+    if spec is None:
+        _REGISTRY = None
+    elif isinstance(spec, str):
+        _REGISTRY = FaultRegistry(parse_spec(spec))
+    else:
+        _REGISTRY = FaultRegistry(dict(spec))
+    return _REGISTRY
+
+
+def registry() -> FaultRegistry | None:
+    """The active registry, installing from REPRO_FAULT_SPEC on first use."""
+    global _REGISTRY, _ENV_CONSULTED
+    if not _ENV_CONSULTED:
+        _ENV_CONSULTED = True
+        text = os.environ.get(ENV_VAR)
+        if text:
+            _REGISTRY = FaultRegistry(parse_spec(text))
+    return _REGISTRY
+
+
+class inject:
+    """Context manager: run a block under a fault spec, then restore.
+
+    ``with faultinject.inject("lowering_error:count=1"): ...``
+    ``inject(None)`` runs the block fault-free (tests use this as an
+    autouse guard so the chaos env can't leak into unrelated asserts)."""
+
+    def __init__(self, spec: str | dict[str, FaultSpec] | None):
+        self._spec = spec
+
+    def __enter__(self) -> FaultRegistry | None:
+        global _REGISTRY, _ENV_CONSULTED
+        self._saved = (_REGISTRY, _ENV_CONSULTED)
+        return configure(self._spec)
+
+    def __exit__(self, *exc):
+        global _REGISTRY, _ENV_CONSULTED
+        _REGISTRY, _ENV_CONSULTED = self._saved
+        return False
+
+
+def should_fire(kind: str, site: str = "") -> bool:
+    reg = registry()
+    return reg.should_fire(kind, site) if reg is not None else False
+
+
+def maybe_raise(kind: str, site: str = "") -> None:
+    """Raise InjectedFault if fault class `kind` fires at this call."""
+    if should_fire(kind, site):
+        raise InjectedFault(f"injected {kind} at {site or '<unknown>'}")
+
+
+def poison(x, site: str = ""):
+    """nan_input fault: return (array, fired) with seeded NaN/Inf damage.
+
+    Only floating arrays are eligible (integer frames can't encode NaN);
+    ineligible arrays pass through untouched without consuming a firing."""
+    reg = registry()
+    if reg is None or "nan_input" not in reg.specs:
+        return x, False
+    arr = np.asarray(x)
+    if not np.issubdtype(arr.dtype, np.floating) or arr.size == 0:
+        return x, False
+    if not reg.should_fire("nan_input", site):
+        return x, False
+    spec = reg.specs["nan_input"]
+    gen = np.random.default_rng((spec.seed, reg.fire_count("nan_input")))
+    k = max(1, arr.size // 997)
+    idx = gen.choice(arr.size, size=min(k, arr.size), replace=False)
+    flat = arr.reshape(-1).copy()
+    flat[idx[0::2]] = np.nan
+    flat[idx[1::2]] = np.inf
+    return flat.reshape(arr.shape), True
+
+
+def corrupt_text(text: str, site: str = "") -> tuple[str, bool]:
+    """cache_corrupt fault: deterministically mangle a text blob.
+
+    The damage (truncation + a non-JSON splice in the middle) guarantees
+    json.loads fails, exercising the quarantine path."""
+    if not should_fire("cache_corrupt", site):
+        return text, False
+    mid = len(text) // 2
+    return text[:mid] + "\x00<corrupted>" + text[mid + 1:], True
+
+
+# -- degradation events ------------------------------------------------------
+
+@dataclass(frozen=True)
+class DegradationEvent:
+    """One 'planned path failed, took a safer one' decision."""
+    stage: str            # "fused_chain" | "plan_table" | "serve" | "measure_chain"
+    from_plan: str        # the plan that failed (rung name, file, ...)
+    to_plan: str          # what we degraded to
+    reason: str           # short human-readable cause
+    detail: str = ""      # chain signature / shape / path / request id
+    injected: bool = False
+    time_s: float = field(default=0.0, compare=False)
+
+
+_DEG_LOG: collections.deque = collections.deque(maxlen=4096)
+_DEG_COUNTS: collections.Counter = collections.Counter()
+
+
+def record_degradation(*, stage: str, from_plan: str, to_plan: str,
+                       reason: str, detail: str = "",
+                       injected: bool = False) -> DegradationEvent:
+    ev = DegradationEvent(stage=stage, from_plan=str(from_plan),
+                          to_plan=str(to_plan), reason=str(reason)[:300],
+                          detail=str(detail)[:300], injected=injected,
+                          time_s=time.time())
+    _DEG_LOG.append(ev)
+    _DEG_COUNTS[(ev.stage, ev.from_plan, ev.to_plan)] += 1
+    return ev
+
+
+def degradation_log() -> list[DegradationEvent]:
+    return list(_DEG_LOG)
+
+
+def degradation_counts() -> dict[tuple[str, str, str], int]:
+    return dict(_DEG_COUNTS)
+
+
+def clear_degradation_log() -> None:
+    _DEG_LOG.clear()
+    _DEG_COUNTS.clear()

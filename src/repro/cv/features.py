@@ -69,7 +69,8 @@ def octave_chain(n_scales: int = 4, sigma0: float = 1.6,
 def gaussian_octave(img: Array, *, n_scales: int = 4, sigma0: float = 1.6,
                     max_ksize: int = 15, with_next_base: bool = True,
                     vc: VectorConfig | None = None,
-                    mode: str | None = None) -> tuple[Array, Array | None]:
+                    mode: str | None = None,
+                    ladder=None) -> tuple[Array, Array | None]:
     """One SIFT octave — blur ladder (+ next-octave base) as ONE Pallas launch.
 
     img: (H, W) single plane (any carrier dtype; SIFT passes f32).
@@ -97,7 +98,7 @@ def gaussian_octave(img: Array, *, n_scales: int = 4, sigma0: float = 1.6,
     default — the ladder is exactly the deep-chain shape the carry rings
     were built for; see stencil.fused_chain)."""
     stages = octave_chain(n_scales, sigma0, max_ksize, with_next_base)
-    outs = stencil.fused_chain(img, stages, vc=vc, mode=mode)
+    outs = stencil.fused_chain(img, stages, vc=vc, mode=mode, ladder=ladder)
     if with_next_base:
         return jnp.stack(outs[:-1]), outs[-1]
     return jnp.stack(outs), None
@@ -197,7 +198,7 @@ def sift_pyramid(img: Array, *, n_octaves: int = 4, n_scales: int = 4,
                  kp_per_octave: int | None = None,
                  contrast_thresh: float = 0.02, edge_thresh: float = 10.0,
                  border: int = 8, vc: VectorConfig | None = None,
-                 mode: str | None = None) -> dict:
+                 mode: str | None = None, ladder=None) -> dict:
     """Multi-octave SIFT scale-space detector — one Pallas launch PER
     OCTAVE, chained through the `next_base` band.
 
@@ -217,7 +218,8 @@ def sift_pyramid(img: Array, *, n_octaves: int = 4, n_scales: int = 4,
     keypoints with xy mapped back to base-image coordinates."""
     g = _normalize_gray(img)
     chains = pyramid_chains(n_octaves, n_scales, sigma0, max_ksize)
-    outs, scales = stencil.chained_launches(g, chains, vc=vc, mode=mode)
+    outs, scales = stencil.chained_launches(g, chains, vc=vc, mode=mode,
+                                            ladder=ladder)
     return pyramid_keypoints(outs, scales, g, max_kp=max_kp,
                              kp_per_octave=kp_per_octave,
                              contrast_thresh=contrast_thresh,
@@ -298,11 +300,17 @@ def _normalize_gray(img: Array) -> Array:
     return g / jnp.maximum(jnp.max(g), 1e-6)
 
 
-@functools.partial(jax.jit, static_argnames=("n_scales", "max_kp", "border"))
+@functools.partial(jax.jit, static_argnames=("n_scales", "max_kp", "border",
+                                             "mode", "ladder"))
 def detect_keypoints(img: Array, *, n_scales: int = 4, max_kp: int = 64,
                      contrast_thresh: float = 0.02, edge_thresh: float = 10.0,
-                     border: int = 8):
+                     border: int = 8, mode: str | None = None, ladder=None):
     """Single-octave DoG detector.
+
+    `mode`/`ladder` select the fused-chain execution plan and degradation
+    ladder; they are STATIC jit arguments because plan choice happens at
+    trace time — an engine switching rungs must pass them explicitly (a
+    `set_default_chain_mode` flip is invisible to already-traced shapes).
 
     Returns dict: xy (max_kp, 2) f32, scale (max_kp,) i32, resp (max_kp,),
     valid (max_kp,) bool.
@@ -311,7 +319,8 @@ def detect_keypoints(img: Array, *, n_scales: int = 4, max_kp: int = 64,
     # Gaussian ladder: ONE fused launch for the whole octave (incremental
     # sigma taps), not one blur launch per scale; this detector is
     # single-octave, so skip the next-octave pyrDown tap
-    pyr, _ = gaussian_octave(g, n_scales=n_scales, with_next_base=False)
+    pyr, _ = gaussian_octave(g, n_scales=n_scales, with_next_base=False,
+                             mode=mode, ladder=ladder)
     return _keypoints_from_pyr(pyr, g, max_kp=max_kp,
                                contrast_thresh=contrast_thresh,
                                edge_thresh=edge_thresh, border=border)
@@ -335,7 +344,7 @@ def aligned_octave_chain(M, shape, *, n_scales: int = 4,
 def align_and_detect(img: Array, M, *, n_scales: int = 4, max_kp: int = 64,
                      contrast_thresh: float = 0.02, edge_thresh: float = 10.0,
                      border: int = 8, vc: VectorConfig | None = None,
-                     mode: str | None = None) -> dict:
+                     mode: str | None = None, ladder=None) -> dict:
     """Warp -> Gaussian ladder -> DoG keypoints on the *aligned* image, with
     the geometric transform fused INTO the octave chain: the inverse-map
     affine enters as a gather stage whose displacement bound is extended by
@@ -350,7 +359,7 @@ def align_and_detect(img: Array, M, *, n_scales: int = 4, max_kp: int = 64,
     the detect_keypoints dict, with "gray" the warped image."""
     g = _normalize_gray(img)
     chain = aligned_octave_chain(M, g.shape, n_scales=n_scales)
-    outs = stencil.fused_chain(g, chain, vc=vc, mode=mode)
+    outs = stencil.fused_chain(g, chain, vc=vc, mode=mode, ladder=ladder)
     pyr = jnp.stack(outs[1:])                  # band 0 is the warped gray
     return _keypoints_from_pyr(pyr, outs[0], max_kp=max_kp,
                                contrast_thresh=contrast_thresh,
@@ -389,14 +398,20 @@ def describe_keypoints(det: dict, *, patch: int = 16) -> dict:
     return {"desc": desc, "valid": det["valid"]}
 
 
-def sift(img: Array, *, max_kp: int = 64, n_octaves: int = 1) -> dict:
+def sift(img: Array, *, max_kp: int = 64, n_octaves: int = 1,
+         mode: str | None = None, ladder=None) -> dict:
     """SIFT keypoints + descriptors.  n_octaves=1 is the single-octave
     detector; n_octaves>1 routes through the multi-octave pyramid engine
     (one fused launch per octave, `sift_pyramid`) with keypoints in
     base-image coordinates — descriptors are sampled from the
     base-resolution gray at the mapped-back coordinates (fixed patch; the
-    per-octave-resolution patch is future work)."""
-    det = (detect_keypoints(img, max_kp=max_kp) if n_octaves <= 1
-           else sift_pyramid(img, n_octaves=n_octaves, max_kp=max_kp))
+    per-octave-resolution patch is future work).  `mode`/`ladder` pick the
+    fused execution plan / degradation ladder (serving threads these
+    explicitly per rung — jit traces bake the plan in)."""
+    ladder = tuple(ladder) if ladder is not None else None
+    det = (detect_keypoints(img, max_kp=max_kp, mode=mode, ladder=ladder)
+           if n_octaves <= 1
+           else sift_pyramid(img, n_octaves=n_octaves, max_kp=max_kp,
+                             mode=mode, ladder=ladder))
     d = describe_keypoints(det)
     return {"xy": det["xy"], "desc": d["desc"], "valid": det["valid"], "resp": det["resp"]}

@@ -34,14 +34,15 @@ fused_chain = stencil.fused_chain
 
 
 def preprocess_bow(imgs: Array, *, blur_ksize: int = 5, sigma: float | None = None,
-                   erode_r: int = 1, vc: VectorConfig | None = None) -> Array:
+                   erode_r: int = 1, vc: VectorConfig | None = None,
+                   mode: str | None = None, ladder=None) -> Array:
     """BoW preprocessing (blur -> erode -> gradient magnitude) as ONE fused
     Pallas launch over the whole (B, H, W, C) batch — every intermediate
     stays in VMEM instead of round-tripping HBM per op/channel/image."""
     chain = (stencil.gaussian_stage(blur_ksize, sigma),
              stencil.erode_stage(erode_r),
              stencil.grad_stage())
-    return stencil.fused_chain(imgs, chain, vc=vc)
+    return stencil.fused_chain(imgs, chain, vc=vc, mode=mode, ladder=ladder)
 
 
 def rgb_to_gray(img: Array) -> Array:

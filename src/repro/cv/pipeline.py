@@ -32,9 +32,35 @@ class BowSvmModel:
     n_classes: int
 
 
+def validate_images(imgs, *, name: str = "imgs") -> None:
+    """Reject garbage batches with a clear ValueError before they turn
+    into garbage keypoints: wrong rank (need (B, H, W) or (B, H, W, C)),
+    non-image dtype, or NaN/Inf float pixels.  Traced arrays (inside jit)
+    skip the value check — shape/dtype are still enforced."""
+    shape = getattr(imgs, "shape", None)
+    dtype = getattr(imgs, "dtype", None)
+    if shape is None or dtype is None:
+        raise ValueError(f"{name}: expected an array, got {type(imgs).__name__}")
+    if len(shape) not in (3, 4):
+        raise ValueError(
+            f"{name}: expected rank 3 (B, H, W) or rank 4 (B, H, W, C), "
+            f"got shape {tuple(shape)}")
+    d = jnp.dtype(dtype)
+    if not (jnp.issubdtype(d, jnp.floating) or d == jnp.uint8):
+        raise ValueError(
+            f"{name}: expected uint8 or floating pixels, got dtype {d.name}")
+    if jnp.issubdtype(d, jnp.floating) and not isinstance(imgs, jax.core.Tracer):
+        if not bool(jnp.all(jnp.isfinite(imgs))):
+            raise ValueError(
+                f"{name}: input contains NaN/Inf pixels — sanitize upstream "
+                "(the serving engine's bad_input='sanitize' does) or fix the "
+                "producer")
+
+
 def extract_features(imgs: Array, *, max_kp: int = 32,
                      preprocess: bool = False, n_octaves: int = 1,
-                     vc: VectorConfig = DEFAULT) -> dict:
+                     vc: VectorConfig = DEFAULT, mode: str | None = None,
+                     ladder=None, validate: bool = True) -> dict:
     """(B, H, W[, C]) -> stacked descriptor sets (jit + vmap over images).
 
     preprocess=True runs the fused blur -> erode -> gradient-magnitude
@@ -46,24 +72,36 @@ def extract_features(imgs: Array, *, max_kp: int = 32,
     engine (features.sift_pyramid: one fused launch per octave, chained
     through the next_base band) so the paper's end-to-end BoW workload runs
     on the fused path; keypoints land in base-image coordinates, so the
-    descriptor/histogram stages downstream are unchanged."""
+    descriptor/histogram stages downstream are unchanged.
+
+    `mode`/`ladder` thread the fused-chain execution plan / degradation
+    ladder down to every fused launch (the serving engine drives its rung
+    switching through these — they reach jitted code as static arguments,
+    which a global default cannot)."""
+    if validate:
+        validate_images(imgs)
+    ladder = tuple(ladder) if ladder is not None else None
     if preprocess:
         x = imgs.astype(jnp.float32)
         if x.ndim == 3:      # (B, H, W) gray batch: add/strip a channel axis
-            imgs = imgproc.preprocess_bow(x[..., None], vc=vc)[..., 0]
+            imgs = imgproc.preprocess_bow(x[..., None], vc=vc,
+                                          mode=mode, ladder=ladder)[..., 0]
         else:
-            imgs = imgproc.preprocess_bow(x, vc=vc)
+            imgs = imgproc.preprocess_bow(x, vc=vc, mode=mode, ladder=ladder)
     def one(img):
-        out = features.sift(img, max_kp=max_kp, n_octaves=n_octaves)
+        out = features.sift(img, max_kp=max_kp, n_octaves=n_octaves,
+                            mode=mode, ladder=ladder)
         return {"desc": out["desc"], "valid": out["valid"]}
     return jax.lax.map(one, imgs.astype(jnp.float32), batch_size=16)
 
 
 def train(key, imgs: Array, labels: Array, *, n_classes: int = 10, dict_size: int = 250,
           max_kp: int = 32, preprocess: bool = False, n_octaves: int = 1,
-          vc: VectorConfig = DEFAULT) -> BowSvmModel:
+          vc: VectorConfig = DEFAULT, mode: str | None = None,
+          ladder=None) -> BowSvmModel:
     feats = extract_features(imgs, max_kp=max_kp, preprocess=preprocess,
-                             n_octaves=n_octaves, vc=vc)
+                             n_octaves=n_octaves, vc=vc, mode=mode,
+                             ladder=ladder)
     B, N, D = feats["desc"].shape
     desc = feats["desc"].reshape(B * N, D)
     wts = feats["valid"].reshape(B * N).astype(jnp.float32)
@@ -75,12 +113,14 @@ def train(key, imgs: Array, labels: Array, *, n_classes: int = 10, dict_size: in
 
 def predict(model: BowSvmModel, imgs: Array, *, max_kp: int = 32,
             preprocess: bool = False, n_octaves: int = 1,
-            vc: VectorConfig = DEFAULT,
+            vc: VectorConfig = DEFAULT, mode: str | None = None,
+            ladder=None, validate: bool = True,
             timing: dict | None = None) -> Array:
     """The paper's three timed test stages."""
     t0 = time.perf_counter()
     feats = extract_features(imgs, max_kp=max_kp, preprocess=preprocess,
-                             n_octaves=n_octaves, vc=vc)
+                             n_octaves=n_octaves, vc=vc, mode=mode,
+                             ladder=ladder, validate=validate)
     jax.block_until_ready(feats["desc"])
     t1 = time.perf_counter()
     hists = bow.batch_histograms(feats["desc"], feats["valid"], model.centroids, vc=vc)

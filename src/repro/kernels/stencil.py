@@ -1162,8 +1162,38 @@ def default_chain_mode() -> str | None:
     return _DEFAULT_MODE
 
 
+# the canonical degradation ladder: every rung to the right is strictly
+# simpler/safer, ending at the staged chain_ref floor (no Pallas launch,
+# always lowerable).  `fused_chain(ladder=...)` — or the process default
+# below — makes any rung failure degrade to the next rung with a recorded
+# event instead of raising; the FINAL rung's failure always raises.
+DEGRADATION_LADDER = ("streaming", "window", "ref")
+
+_DEFAULT_LADDER: tuple[str, ...] | None = None
+
+
+def set_default_ladder(ladder) -> tuple[str, ...] | None:
+    """Install a process-default degradation ladder for auto/explicit-mode
+    `fused_chain` calls (None disables: rung failures raise, the pre-ladder
+    contract).  Returns the previous default (save/restore)."""
+    global _DEFAULT_LADDER
+    if ladder is not None:
+        ladder = tuple(ladder)
+        for m in ladder:
+            if m not in ("streaming", "window", "ref"):
+                raise ValueError(f"set_default_ladder: unknown rung {m!r}")
+        if not ladder:
+            ladder = None
+    prev, _DEFAULT_LADDER = _DEFAULT_LADDER, ladder
+    return prev
+
+
+def default_ladder() -> tuple[str, ...] | None:
+    return _DEFAULT_LADDER
+
+
 def fused_chain(img: Array, stages, *, vc: VectorConfig | None = None,
-                mode: str | None = None):
+                mode: str | None = None, ladder=None):
     """Run a stage chain over an image in ONE Pallas launch.
 
     img: (H, W), (H, W, C) or (B, H, W, C); u8 / f32 / bf16 carrier.
@@ -1193,7 +1223,18 @@ def fused_chain(img: Array, stages, *, vc: VectorConfig | None = None,
     fused window would be mostly replicated padding, so there is no VMEM
     traffic to save — and the guard keeps the window planner out of the
     degenerate pad-dominated regime entirely.
+
+    ladder: degradation ladder — an ordered tuple of rungs (subset of
+        `DEGRADATION_LADDER`); when the resolved plan (or any later rung)
+        fails with anything but a ValueError (chain misconfiguration
+        always surfaces), execution degrades to the next rung and a
+        structured `core.faultinject` degradation event is recorded.  The
+        final rung's failure raises.  None = the process default
+        (`set_default_ladder`), which itself defaults to no ladder — the
+        pre-ladder raise-on-failure contract.
     """
+    from repro.core import faultinject
+
     stages = tuple(stages)
     if not stages:
         return img
@@ -1203,6 +1244,14 @@ def fused_chain(img: Array, stages, *, vc: VectorConfig | None = None,
     h_in, w_in = ((img.shape[-2], img.shape[-1]) if img.ndim == 2
                   else (img.shape[-3], img.shape[-2]))
     if h_in <= ph_in or w_in <= pw_in:
+        # structural chain_ref fallback: recorded so serving can tell a
+        # pad-dominated plane took the no-launch route by design
+        faultinject.record_degradation(
+            stage="fused_chain", from_plan=mode or _DEFAULT_MODE or "auto",
+            to_plan="ref",
+            reason=f"planes<=halo ({h_in}x{w_in} vs {ph_in}x{pw_in}): "
+                   "structural chain_ref fallback",
+            detail=f"{img.shape}|{jnp.dtype(img.dtype).name}")
         return ref.chain_ref(img, stages)
     if mode in (None, "auto"):
         if _DEFAULT_MODE is not None:       # CI mode-matrix override
@@ -1213,35 +1262,71 @@ def fused_chain(img: Array, stages, *, vc: VectorConfig | None = None,
             if mode is None:
                 # heuristic: carry rows whenever there is row halo to carry
                 mode = "streaming" if ph_in > 0 else "window"
-    if mode == "ref":
-        return _chain_ref_planes(img, _flat_weights(stages), _spec_of(stages))
-    if mode not in ("streaming", "window"):
+    if mode not in ("streaming", "window", "ref"):
         raise ValueError(f"fused_chain: unknown mode {mode!r} (expected "
                          "'streaming', 'window', 'ref' or None)")
-    stream = mode == "streaming"
-    if vc is None:
-        from repro.core.autotune import pick_chain_lmul
-        vc = pick_chain_lmul(stages, img.shape[-2] if img.ndim > 2 else img.shape[-1],
-                             in_dtype=img.dtype, streaming=stream)
+    if ladder is None:
+        ladder = _DEFAULT_LADDER
+    if ladder:
+        ladder = tuple(ladder)
+        for m in ladder:
+            if m not in ("streaming", "window", "ref"):
+                raise ValueError(f"fused_chain: unknown ladder rung {m!r}")
+        tail = ladder[ladder.index(mode) + 1:] if mode in ladder else ladder
+        rungs, seen = [mode], {mode}
+        for m in tail:
+            if m not in seen:
+                rungs.append(m)
+                seen.add(m)
+        rungs = tuple(rungs)
+    else:
+        rungs = (mode,)
 
-    global _LAUNCHES
-    _LAUNCHES += 1
+    def _run(plan: str):
+        if plan == "ref":
+            return _chain_ref_planes(img, _flat_weights(stages),
+                                     _spec_of(stages))
+        stream = plan == "streaming"
+        faultinject.maybe_raise("lowering_error", site=f"fused_chain:{plan}")
+        vck = vc
+        if vck is None:
+            from repro.core.autotune import pick_chain_lmul
+            vck = pick_chain_lmul(
+                stages, img.shape[-2] if img.ndim > 2 else img.shape[-1],
+                in_dtype=img.dtype, streaming=stream)
 
-    spec, weights = _spec_of(stages), _flat_weights(stages)
-    if img.ndim == 2:
-        outs = _chain_planes(img[None], weights, spec, vc, stream=stream)
-        outs = tuple(o[0] for o in outs)
-    elif img.ndim == 3:                    # (H, W, C) -> planes (C, H, W)
-        planes = jnp.moveaxis(img, -1, 0)
-        outs = _chain_planes(planes, weights, spec, vc, stream=stream)
-        outs = tuple(jnp.moveaxis(o, 0, -1) for o in outs)
-    else:                                  # (B, H, W, C) -> planes (B*C, H, W)
-        B, H, W, C = img.shape
-        planes = jnp.moveaxis(img, -1, 1).reshape(B * C, H, W)
-        outs = _chain_planes(planes, weights, spec, vc, stream=stream)
-        outs = tuple(jnp.moveaxis(o.reshape(B, C, *o.shape[1:]), 1, -1)
-                     for o in outs)
-    return outs[0] if len(outs) == 1 else outs
+        global _LAUNCHES
+        _LAUNCHES += 1
+
+        spec, weights = _spec_of(stages), _flat_weights(stages)
+        if img.ndim == 2:
+            outs = _chain_planes(img[None], weights, spec, vck, stream=stream)
+            outs = tuple(o[0] for o in outs)
+        elif img.ndim == 3:                # (H, W, C) -> planes (C, H, W)
+            planes = jnp.moveaxis(img, -1, 0)
+            outs = _chain_planes(planes, weights, spec, vck, stream=stream)
+            outs = tuple(jnp.moveaxis(o, 0, -1) for o in outs)
+        else:                              # (B, H, W, C) -> planes (B*C, H, W)
+            B, H, W, C = img.shape
+            planes = jnp.moveaxis(img, -1, 1).reshape(B * C, H, W)
+            outs = _chain_planes(planes, weights, spec, vck, stream=stream)
+            outs = tuple(jnp.moveaxis(o.reshape(B, C, *o.shape[1:]), 1, -1)
+                         for o in outs)
+        return outs[0] if len(outs) == 1 else outs
+
+    for i, rung in enumerate(rungs):
+        try:
+            return _run(rung)
+        except ValueError:
+            raise           # chain misconfiguration: every plan must surface it
+        except Exception as e:
+            if i == len(rungs) - 1:
+                raise
+            faultinject.record_degradation(
+                stage="fused_chain", from_plan=rung, to_plan=rungs[i + 1],
+                reason=f"{type(e).__name__}: {e}",
+                detail=f"{img.shape}|{jnp.dtype(img.dtype).name}",
+                injected=isinstance(e, faultinject.InjectedFault))
 
 
 # ---------------------------------------------------------------------------
@@ -1271,7 +1356,7 @@ def validate_next_base(stages) -> int:
 
 
 def chained_launches(img: Array, chains, *, vc: VectorConfig | None = None,
-                     mode: str | None = None) -> tuple[list, list]:
+                     mode: str | None = None, ladder=None) -> tuple[list, list]:
     """Cross-launch chain composition: one `fused_chain` launch per link,
     where link k+1 consumes link k's final output band (the `next_base`
     terminal strided tap, see `validate_next_base`) as its input — an
@@ -1305,7 +1390,7 @@ def chained_launches(img: Array, chains, *, vc: VectorConfig | None = None,
         last = k == len(chains) - 1
         if not last:
             validate_next_base(stages)
-        outs = fused_chain(base, stages, vc=vc, mode=mode)
+        outs = fused_chain(base, stages, vc=vc, mode=mode, ladder=ladder)
         if not isinstance(outs, tuple):
             outs = (outs,)
         scales.append((sy, sx))

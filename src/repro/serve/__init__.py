@@ -1,1 +1,2 @@
 from . import engine  # noqa: F401
+from . import cv_engine  # noqa: F401

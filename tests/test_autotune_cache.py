@@ -46,8 +46,11 @@ def _img(rng):
 
 
 def _fake_disk_entry(path, chain, img, vc, mode):
+    # entries must be sealed (schema version + checksum) or the validated
+    # plan-table loader quarantines them — see test_plan_table.py
     key = autotune._cache_key(chain, img.shape, img.dtype, vc)
-    path.write_text(json.dumps({key: {"mode": mode, "times": {mode: 0.0}}}))
+    entry = autotune.seal_entry(key, {"mode": mode, "times": {mode: 0.0}})
+    path.write_text(json.dumps({key: entry}))
 
 
 def test_same_run_twice_is_deterministic(cache_env):

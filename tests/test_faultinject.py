@@ -1,0 +1,120 @@
+"""Deterministic fault-injection harness: spec grammar, firing schedules,
+scoping, and the degradation-event log (PR-6 robustness layer)."""
+import numpy as np
+import pytest
+
+from repro.core import faultinject as fi
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    """Each test runs fault-free unless it installs its own spec — the
+    chaos CI cell exports REPRO_FAULT_SPEC for the whole process, and it
+    must not leak into these asserts."""
+    with fi.inject(None):
+        fi.clear_degradation_log()
+        yield
+    fi.clear_degradation_log()
+
+
+def test_parse_spec_grammar():
+    specs = fi.parse_spec("lowering_error:p=0.5,seed=11;cache_corrupt;"
+                          "nan_input:count=2,after=1")
+    assert set(specs) == {"lowering_error", "cache_corrupt", "nan_input"}
+    assert specs["lowering_error"].p == 0.5
+    assert specs["lowering_error"].seed == 11
+    assert specs["cache_corrupt"].p == 1.0
+    assert specs["nan_input"].count == 2 and specs["nan_input"].after == 1
+    assert fi.parse_spec("") == {} and fi.parse_spec(None) == {}
+
+
+def test_parse_spec_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        fi.parse_spec("segfault")
+    with pytest.raises(ValueError, match="unknown fault knob"):
+        fi.parse_spec("lowering_error:q=1")
+
+
+def test_firing_is_deterministic():
+    def run():
+        with fi.inject("lowering_error:p=0.5,seed=3") as reg:
+            return [reg.should_fire("lowering_error") for _ in range(64)]
+    a, b = run(), run()
+    assert a == b
+    assert any(a) and not all(a)     # p=0.5 over 64 calls: both outcomes
+
+
+def test_count_and_after_bounds():
+    with fi.inject("lowering_error:count=2,after=1") as reg:
+        fires = [reg.should_fire("lowering_error") for _ in range(6)]
+    assert fires == [False, True, True, False, False, False]
+
+
+def test_inject_restores_prior_state():
+    fi.configure("cache_corrupt")
+    try:
+        with fi.inject("nan_input"):
+            assert set(fi.registry().specs) == {"nan_input"}
+        assert set(fi.registry().specs) == {"cache_corrupt"}
+        with fi.inject(None):
+            assert fi.registry() is None
+        assert fi.registry() is not None
+    finally:
+        fi.configure(None)
+
+
+def test_env_spec_installs_lazily(monkeypatch):
+    monkeypatch.setenv(fi.ENV_VAR, "bucket_miss")
+    with fi.inject(None):
+        pass                          # exit restores "env not yet consulted"
+    monkeypatch.setattr(fi, "_REGISTRY", None)
+    monkeypatch.setattr(fi, "_ENV_CONSULTED", False)
+    reg = fi.registry()
+    assert reg is not None and "bucket_miss" in reg.specs
+
+
+def test_maybe_raise():
+    with fi.inject("lowering_error"):
+        with pytest.raises(fi.InjectedFault, match="lowering_error"):
+            fi.maybe_raise("lowering_error", site="here")
+    fi.maybe_raise("lowering_error")      # no spec active: no-op
+
+
+def test_poison_floats_only_and_deterministic():
+    x = np.zeros((16, 16), np.float32)
+    with fi.inject("nan_input"):
+        a, fired_a = fi.poison(x)
+    with fi.inject("nan_input"):
+        b, fired_b = fi.poison(x)
+    assert fired_a and fired_b
+    assert not np.isfinite(a).all()
+    np.testing.assert_array_equal(a, b)   # same seed, same damage
+    u8 = np.zeros((16, 16), np.uint8)
+    with fi.inject("nan_input"):
+        out, fired = fi.poison(u8)
+    assert not fired and out is u8        # ints can't encode NaN: untouched
+
+
+def test_corrupt_text_breaks_json():
+    import json
+    blob = json.dumps({"a": 1, "b": [1, 2, 3]})
+    with fi.inject("cache_corrupt"):
+        damaged, fired = fi.corrupt_text(blob)
+    assert fired and damaged != blob
+    with pytest.raises(json.JSONDecodeError):
+        json.loads(damaged)
+    clean, fired = fi.corrupt_text(blob)  # no spec: identity
+    assert clean == blob and not fired
+
+
+def test_degradation_log_and_counts():
+    fi.record_degradation(stage="fused_chain", from_plan="streaming",
+                          to_plan="window", reason="test", injected=True)
+    fi.record_degradation(stage="fused_chain", from_plan="streaming",
+                          to_plan="window", reason="again")
+    log = fi.degradation_log()
+    assert len(log) == 2
+    assert log[0].stage == "fused_chain" and log[0].injected
+    assert fi.degradation_counts()[("fused_chain", "streaming", "window")] == 2
+    fi.clear_degradation_log()
+    assert fi.degradation_log() == [] and fi.degradation_counts() == {}

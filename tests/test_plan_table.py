@@ -1,0 +1,171 @@
+"""Versioned plan-table artifact: seal/load round trip, quarantine of
+corrupt files and entries, and the measure_chain deadline/watchdog
+contract (PR-6 robustness layer)."""
+import glob
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune, faultinject
+from repro.core.vector import VectorConfig
+from repro.kernels import stencil
+from repro.train.fault import StragglerWatchdog
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    with faultinject.inject(None):
+        faultinject.clear_degradation_log()
+        yield
+    faultinject.clear_degradation_log()
+
+
+@pytest.fixture
+def cache_env(tmp_path, monkeypatch):
+    path = tmp_path / "chain_autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    monkeypatch.delenv("REPRO_AUTOTUNE_CACHE_READ", raising=False)
+    monkeypatch.setattr(autotune, "_MODE_CACHE", {})
+    monkeypatch.setattr(autotune, "_DISK_CACHE_LOADED", False)
+    return path
+
+
+def _entries(n=3):
+    return {f"chain{i}|8x8|uint8|auto|cpu": {"mode": "window",
+                                             "times": {"window": 0.001 * (i + 1)}}
+            for i in range(n)}
+
+
+def _corrupt_files(path):
+    return glob.glob(f"{path}.corrupt-*")
+
+
+def test_save_load_round_trip(cache_env):
+    entries = _entries()
+    assert autotune.save_plan_table(entries, str(cache_env))
+    on_disk = json.loads(cache_env.read_text())
+    for k, sealed in on_disk.items():
+        assert sealed["v"] == autotune.PLAN_SCHEMA_VERSION
+        assert sealed["sum"] == autotune._entry_checksum(
+            k, {"mode": sealed["mode"], "times": sealed["times"]})
+    assert autotune.load_plan_table(str(cache_env)) == entries
+    assert not _corrupt_files(cache_env)
+
+
+def test_missing_file_is_empty(cache_env):
+    assert autotune.load_plan_table(str(cache_env)) == {}
+
+
+def test_whole_file_corruption_quarantined(cache_env):
+    cache_env.write_text("{not json at all")
+    with pytest.warns(autotune.PlanTableWarning, match="quarantined"):
+        assert autotune.load_plan_table(str(cache_env)) == {}
+    assert not cache_env.exists()            # removed, not left to re-trip
+    assert len(_corrupt_files(cache_env)) == 1
+    ev = faultinject.degradation_log()
+    assert any(e.stage == "plan_table" for e in ev)
+
+
+def test_bad_entries_quarantined_good_survive(cache_env):
+    entries = _entries(3)
+    autotune.save_plan_table(entries, str(cache_env))
+    on_disk = json.loads(cache_env.read_text())
+    keys = sorted(on_disk)
+    on_disk[keys[0]]["mode"] = "streaming"          # checksum now wrong
+    on_disk[keys[1]]["v"] = autotune.PLAN_SCHEMA_VERSION + 1   # stale schema
+    cache_env.write_text(json.dumps(on_disk))
+    with pytest.warns(autotune.PlanTableWarning, match="2 invalid entries"):
+        loaded = autotune.load_plan_table(str(cache_env))
+    assert sorted(loaded) == keys[2:]               # the valid remainder
+    assert len(_corrupt_files(cache_env)) == 1
+    # the table was rewritten with only valid entries: a re-load is clean
+    assert autotune.load_plan_table(str(cache_env)) == loaded
+    assert len(_corrupt_files(cache_env)) == 1
+
+
+def test_corrupt_entry_never_routes(cache_env, monkeypatch):
+    """A tampered winner must not silently win a routing decision."""
+    img = jnp.asarray(np.zeros((48, 64), np.uint8))
+    chain = (stencil.erode_stage(1),)
+    key = autotune._cache_key(chain, img.shape, img.dtype, None)
+    sealed = autotune.seal_entry(key, {"mode": "ref", "times": {"ref": 0.0}})
+    sealed["mode"] = "streaming"                    # tamper after sealing
+    cache_env.write_text(json.dumps({key: sealed}))
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE_READ", "1")
+    with pytest.warns(autotune.PlanTableWarning):
+        assert autotune.cached_chain_mode(chain, img.shape, img.dtype,
+                                          None) is None
+
+
+def test_unreadable_dir_write_warns(tmp_path):
+    target = tmp_path / "no_such_dir_perm"
+    target.mkdir()
+    target.chmod(0o500)                              # read-only dir
+    path = target / "sub" / "cache.json"
+    if os.access(str(target), os.W_OK):              # running as root: chmod
+        pytest.skip("cannot revoke write permission in this environment")
+    with pytest.warns(autotune.PlanTableWarning, match="write failed"):
+        assert not autotune.save_plan_table(_entries(1), str(path))
+
+
+def test_injected_cache_corruption_survives(cache_env):
+    """cache_corrupt fault: the reader quarantines and returns empty
+    instead of crashing — and measure_chain's persist path rides over it."""
+    autotune.save_plan_table(_entries(2), str(cache_env))
+    with faultinject.inject("cache_corrupt:count=1"):
+        with pytest.warns(autotune.PlanTableWarning):
+            assert autotune.load_plan_table(str(cache_env)) == {}
+    assert len(_corrupt_files(cache_env)) == 1
+
+
+def test_measure_chain_persists_sealed_entries(cache_env):
+    img = jnp.asarray(np.random.default_rng(0).integers(
+        0, 256, (48, 64), np.uint8))
+    chain = (stencil.erode_stage(1),)
+    res = autotune.measure_chain(img, chain, n=1, modes=("window", "ref"))
+    on_disk = json.loads(cache_env.read_text())
+    key = autotune._cache_key(chain, img.shape, img.dtype, None)
+    assert on_disk[key]["v"] == autotune.PLAN_SCHEMA_VERSION
+    assert on_disk[key]["mode"] == res["mode"]
+    assert autotune.load_plan_table(str(cache_env))[key] == res
+
+
+def test_measure_chain_injected_timeout(cache_env):
+    img = jnp.asarray(np.zeros((48, 64), np.uint8))
+    chain = (stencil.erode_stage(1),)
+    with faultinject.inject("measure_timeout:count=1"):
+        with pytest.raises(autotune.MeasureTimeout, match="injected"):
+            autotune.measure_chain(img, chain, n=1)
+        # the fault is count-bounded: the retry measures normally
+        res = autotune.measure_chain(img, chain, n=1, modes=("ref",))
+    assert res["mode"] == "ref"
+
+
+def test_measure_chain_deadline_partial(cache_env):
+    """Deadline hit mid-measurement: the winner comes from the candidates
+    that DID run, skipped ones are recorded as a degradation event."""
+    img = jnp.asarray(np.zeros((48, 64), np.uint8))
+    chain = (stencil.erode_stage(1),)
+    res = autotune.measure_chain(img, chain, n=1, deadline_s=0.0,
+                                 modes=("ref", "window"))
+    assert res["mode"] == "ref" and "window" not in res["times"]
+    ev = [e for e in faultinject.degradation_log()
+          if e.stage == "measure_chain"]
+    assert ev and "deadline" in ev[0].reason
+
+
+def test_measure_chain_watchdog_flags_straggler(cache_env):
+    img = jnp.asarray(np.zeros((48, 64), np.uint8))
+    chain = (stencil.erode_stage(1),)
+    # warmup=0 + tiny EWMA seeded by threshold trickery: force an alarm by
+    # making the first (compile-heavy) candidate follow a zero-cost warmup
+    wd = StragglerWatchdog(threshold=1e-9, alpha=0.5, warmup=0)
+    wd.ewma = 1e-9                       # anything real now looks slow
+    autotune.measure_chain(img, chain, n=1, modes=("ref",), watchdog=wd)
+    assert wd.alarms
+    ev = [e for e in faultinject.degradation_log()
+          if e.stage == "measure_chain" and "straggler" in e.reason]
+    assert ev

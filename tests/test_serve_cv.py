@@ -1,0 +1,329 @@
+"""Fault-tolerant serving engine + degradation-ladder contract (PR-6).
+
+Every fault class in core.faultinject must be *survived* by CvEngine —
+outputs bit-identical to the chain_ref floor where the ladder lands
+there, a structured degradation event recorded, zero unhandled
+exceptions — and the pre-existing structural chain_ref fallbacks
+(planes <= accumulated halo; pyramid staged tails) must stay
+bit-identical to `ref.chain_ref` under serving bucket shapes."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import faultinject
+from repro.cv import features, pipeline
+from repro.kernels import ref, stencil
+from repro.serve.cv_engine import CvEngine, Request
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    """Tests are fault-free unless they install their own spec (the chaos
+    CI cell's process-wide REPRO_FAULT_SPEC must not skew these asserts);
+    the explicit chaos-gate test re-reads the env itself."""
+    with faultinject.inject(None):
+        faultinject.clear_degradation_log()
+        yield
+    faultinject.clear_degradation_log()
+
+
+def _gray_f32(n, lo=40, hi=48, seed=0):
+    gen = np.random.default_rng(seed)
+    return [gen.random((int(gen.integers(lo, hi + 1)),
+                        int(gen.integers(lo, hi + 1))),
+                       dtype=np.float32) for _ in range(n)]
+
+
+def _rgb_u8(n, lo=24, hi=32, seed=1):
+    gen = np.random.default_rng(seed)
+    return [gen.integers(0, 256, (int(gen.integers(lo, hi + 1)),
+                                  int(gen.integers(lo, hi + 1)), 3),
+                         dtype=np.uint8) for _ in range(n)]
+
+
+def _expected(eng, mode):
+    """Recompute descriptors for every captured canonical batch at an
+    explicit rung — the engine's output contract is defined on the padded
+    + sanitized frames it actually processed."""
+    outs = []
+    for _, batch in eng.captured:
+        feats = pipeline.extract_features(jnp.asarray(batch),
+                                          max_kp=eng.max_kp, mode=mode,
+                                          validate=False)
+        outs.append((np.asarray(feats["desc"]), np.asarray(feats["valid"])))
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# engine correctness (fault-free)
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_direct_pipeline():
+    work = _rgb_u8(6)
+    eng = CvEngine(buckets=((32, 32),), max_batch=8, max_kp=8,
+                   capture_frames=True)
+    res = eng.extract(work)
+    assert all(r.ok for r in res)
+    assert all(r.bucket == (32, 32) for r in res)
+    assert all(r.plan == "streaming" for r in res)     # first rung held
+    (desc, valid), = _expected(eng, "streaming")
+    for k, r in enumerate(res):
+        np.testing.assert_array_equal(r.desc, desc[k])
+        np.testing.assert_array_equal(r.valid, valid[k])
+
+
+def test_engine_splits_batches_and_buckets():
+    work = _rgb_u8(5) + _gray_f32(3, lo=40, hi=44, seed=2)
+    eng = CvEngine(buckets=((32, 32), (48, 48)), max_batch=4, max_kp=8)
+    res = eng.extract(work)
+    assert all(r.ok for r in res)
+    assert [r.bucket for r in res[:5]] == [(32, 32)] * 5
+    assert [r.bucket for r in res[5:]] == [(48, 48)] * 3
+    assert eng.stats["served"] == 8
+
+
+def test_engine_rejects_malformed_frames():
+    work = [np.zeros((8, 8, 2), np.uint8), np.zeros((8,), np.float32),
+            np.zeros((16, 16), np.int32)] + _rgb_u8(1)
+    eng = CvEngine(buckets=((32, 32),), max_kp=8)
+    res = eng.extract(work)
+    assert [r.ok for r in res] == [False, False, False, True]
+    assert "bad_rank" in res[0].error and "bad_rank" in res[1].error
+    assert "bad_dtype" in res[2].error
+
+
+# ---------------------------------------------------------------------------
+# fault classes: survived, chain_ref-identical, event recorded
+# ---------------------------------------------------------------------------
+
+def test_lowering_fault_degrades_to_chain_ref_identical():
+    """lowering_error at p=1: streaming and window both fail, the engine
+    lands on the chain_ref floor; outputs are bit-identical to an explicit
+    mode="ref" run over the same canonical frames."""
+    work = _gray_f32(4)
+    eng = CvEngine(buckets=((48, 48),), max_batch=8, max_kp=8,
+                   max_retries=0, capture_frames=True)
+    # injected lowering faults fire at TRACE time (like real lowering
+    # errors); drop cached traces so this shape actually re-traces
+    jax.clear_caches()
+    with faultinject.inject("lowering_error"):
+        res = eng.extract(work)
+    assert all(r.ok for r in res)
+    assert all(r.plan == "ref" for r in res)
+    assert all(r.degraded for r in res)
+    hops = [(e.from_plan, e.to_plan) for e in res[0].events]
+    assert ("streaming", "window") in hops and ("window", "ref") in hops
+    assert all(e.injected for e in res[0].events)
+    (desc, valid), = _expected(eng, "ref")
+    for k, r in enumerate(res):
+        np.testing.assert_array_equal(r.desc, desc[k])
+        np.testing.assert_array_equal(r.valid, valid[k])
+
+
+def test_transient_fault_retries_same_rung():
+    """A count-bounded fault is transient: the bounded retry recovers the
+    FIRST rung (no degradation past it) and records the retry event."""
+    work = _gray_f32(4)
+    eng = CvEngine(buckets=((48, 48),), max_batch=8, max_kp=8,
+                   max_retries=1, backoff_s=0.0, capture_frames=True)
+    jax.clear_caches()
+    with faultinject.inject("lowering_error:count=1"):
+        res = eng.extract(work)
+    assert all(r.ok for r in res)
+    assert all(r.plan == "streaming" for r in res)
+    assert res[0].retries == 1
+    assert any("retry" in e.reason for e in res[0].events)
+    (desc, _), = _expected(eng, "streaming")
+    for k, r in enumerate(res):
+        np.testing.assert_array_equal(r.desc, desc[k])
+
+
+def test_nan_poisoning_sanitized_with_event():
+    work = _gray_f32(2, lo=28, hi=31, seed=3)
+    eng = CvEngine(buckets=((32, 32),), max_kp=8)
+    with faultinject.inject("nan_input"):
+        res = eng.extract(work)
+    assert all(r.ok for r in res)
+    assert eng.stats["sanitized"] == 2
+    ev = [e for r in res for e in r.events if e.to_plan == "sanitized"]
+    assert ev and all(e.injected for e in ev)
+    assert all(np.isfinite(r.desc).all() for r in res)
+
+
+def test_nan_poisoning_reject_mode():
+    work = _gray_f32(2, lo=28, hi=31, seed=3)
+    eng = CvEngine(buckets=((32, 32),), max_kp=8, bad_input="reject")
+    with faultinject.inject("nan_input"):
+        res = eng.extract(work)
+    assert all(not r.ok for r in res)
+    assert all("bad_values" in r.error for r in res)
+
+
+def test_bucket_miss_serves_exact_shape():
+    work = _rgb_u8(2, lo=28, hi=28, seed=4)        # all (28, 28, 3)
+    eng = CvEngine(buckets=((32, 32),), max_kp=8)
+    with faultinject.inject("bucket_miss"):
+        res = eng.extract(work)
+    assert all(r.ok for r in res)
+    assert all(r.bucket == (28, 28) for r in res)  # exact shape, no padding
+    ev = [e for e in faultinject.degradation_log()
+          if e.to_plan == "exact-shape"]
+    assert ev and ev[0].injected
+
+
+def test_oversized_frame_serves_exact_shape():
+    eng = CvEngine(buckets=((32, 32),), max_kp=8)
+    res = eng.extract(_gray_f32(1, lo=40, hi=40, seed=5))
+    assert res[0].ok and res[0].bucket == (40, 40)
+    assert any(e.to_plan == "exact-shape" and not e.injected
+               for e in faultinject.degradation_log())
+
+
+def test_warm_measure_timeout_degrades_to_heuristic():
+    eng = CvEngine(buckets=((32, 32),), max_kp=8)
+    with faultinject.inject("measure_timeout:count=1"):
+        assert eng.warm((48, 48)) is None          # survived, not raised
+    ev = [e for e in faultinject.degradation_log()
+          if e.to_plan == "heuristic"]
+    assert ev and "timed out" in ev[0].reason
+    # fault exhausted: warming a structural-fallback bucket now succeeds
+    entry = eng.warm((32, 32), deadline_s=60.0)
+    assert entry is not None and entry["mode"] in ("streaming", "window", "ref")
+
+
+def test_deadlines_pre_and_post():
+    frame = _rgb_u8(1, lo=30, hi=30, seed=6)[0]
+    eng = CvEngine(buckets=((32, 32),), max_kp=8)
+    res = eng.submit([Request(frame, deadline=time.monotonic() - 1.0),
+                      Request(frame, deadline=time.monotonic() + 0.002),
+                      Request(frame)])
+    assert not res[0].ok and res[0].error == "deadline_exceeded"
+    assert res[2].ok and not res[2].deadline_missed
+    # the 2ms deadline admits but cannot beat the batch compute: answered,
+    # flagged late (post-compute miss is reported, not dropped)
+    assert res[1].ok and res[1].deadline_missed
+    assert eng.stats["deadline_missed"] == 2
+
+
+# ---------------------------------------------------------------------------
+# structural chain_ref fallbacks under serving bucket shapes (satellite)
+# ---------------------------------------------------------------------------
+
+def test_planes_le_halo_bit_identical_to_chain_ref():
+    """32x32 (the CIFAR serving bucket) vs the octave chain's 34-row
+    accumulated halo: every mode structurally falls back to ref.chain_ref
+    — bit-identical, zero launches, event recorded."""
+    gen = np.random.default_rng(7)
+    img = jnp.asarray(gen.random((32, 32), dtype=np.float32))
+    chain = features.octave_chain(with_next_base=False)
+    want = [np.asarray(o) for o in ref.chain_ref(img, chain)]
+    for mode in ("streaming", "window", "ref"):
+        faultinject.clear_degradation_log()
+        stencil.reset_launch_counter()
+        outs = stencil.fused_chain(img, chain, mode=mode)
+        assert stencil.launch_count() == 0
+        for got, exp in zip(outs, want):
+            np.testing.assert_array_equal(np.asarray(got), exp)
+        ev = faultinject.degradation_log()
+        assert any(e.stage == "fused_chain" and e.to_plan == "ref"
+                   and "planes<=halo" in e.reason for e in ev)
+
+
+def test_planes_le_halo_fallback_survives_injected_fault():
+    """The structural fallback never reaches the pallas path, so a p=1
+    lowering fault cannot touch it — same bits, no ladder involvement."""
+    gen = np.random.default_rng(8)
+    img = jnp.asarray(gen.random((32, 32), dtype=np.float32))
+    chain = features.octave_chain(with_next_base=False)
+    want = [np.asarray(o) for o in ref.chain_ref(img, chain)]
+    with faultinject.inject("lowering_error"):
+        outs = stencil.fused_chain(img, chain, mode="streaming",
+                                   ladder=("streaming", "window", "ref"))
+    for got, exp in zip(outs, want):
+        np.testing.assert_array_equal(np.asarray(got), exp)
+
+
+def test_pyramid_staged_tail_bit_identical_to_chain_ref():
+    """64x64 3-octave pyramid: link 2's 16x16 planes undershoot its 29-row
+    halo — the tail runs ref.chain_ref on the carried base, bit-identical,
+    with the structural event recorded."""
+    gen = np.random.default_rng(9)
+    g = jnp.asarray(gen.random((64, 64), dtype=np.float32))
+    chains = features.pyramid_chains(3)
+    # the tail's expected bits: walk the carry chain at the same rung
+    outs0 = stencil.fused_chain(g, chains[0], mode="streaming")
+    outs1 = stencil.fused_chain(outs0[-1], chains[1], mode="streaming")
+    want_tail = [np.asarray(o) for o in ref.chain_ref(outs1[-1], chains[2])]
+    faultinject.clear_degradation_log()
+    outs_all, _ = stencil.chained_launches(g, chains, mode="streaming")
+    for got, exp in zip(outs_all[2], want_tail):
+        np.testing.assert_array_equal(np.asarray(got), exp)
+    assert any(e.stage == "fused_chain" and "planes<=halo" in e.reason
+               for e in faultinject.degradation_log())
+
+
+def test_pyramid_under_faults_equals_ref_pyramid():
+    """p=1 lowering faults walk every launchable link down the ladder to
+    the chain_ref floor: the whole pyramid equals an explicit mode="ref"
+    run bit-for-bit, with injected degradation events on each link."""
+    gen = np.random.default_rng(10)
+    g = jnp.asarray(gen.random((64, 64), dtype=np.float32))
+    chains = features.pyramid_chains(3)
+    want, _ = stencil.chained_launches(g, chains, mode="ref")
+    faultinject.clear_degradation_log()
+    with faultinject.inject("lowering_error"):
+        got, _ = stencil.chained_launches(
+            g, chains, mode="streaming", ladder=("streaming", "window", "ref"))
+    for w_link, g_link in zip(want, got):
+        for w, o in zip(w_link, g_link):
+            np.testing.assert_array_equal(np.asarray(w), np.asarray(o))
+    ev = [e for e in faultinject.degradation_log() if e.injected]
+    assert {(e.from_plan, e.to_plan) for e in ev} >= \
+        {("streaming", "window"), ("window", "ref")}
+
+
+# ---------------------------------------------------------------------------
+# pipeline input validation (satellite)
+# ---------------------------------------------------------------------------
+
+def test_extract_features_rejects_bad_rank_dtype():
+    with pytest.raises(ValueError, match="rank"):
+        pipeline.extract_features(np.zeros((16, 16), np.uint8))
+    with pytest.raises(ValueError, match="dtype"):
+        pipeline.extract_features(np.zeros((2, 16, 16), np.int32))
+    with pytest.raises(ValueError, match="expected an array"):
+        pipeline.extract_features([[1, 2], [3, 4]])
+
+
+def test_extract_features_rejects_nan_inf():
+    bad = np.zeros((2, 16, 16), np.float32)
+    bad[0, 3, 3] = np.nan
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        pipeline.extract_features(bad)
+    bad[0, 3, 3] = np.inf
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        pipeline.predict(None, bad)     # validation fires before model use
+
+
+# ---------------------------------------------------------------------------
+# chaos gate: the CI cell's end-to-end zero-unhandled-exceptions check
+# ---------------------------------------------------------------------------
+
+DEFAULT_CHAOS_SPEC = ("lowering_error:p=0.7,seed=5;nan_input:p=0.5;"
+                      "bucket_miss:p=0.3;cache_corrupt;measure_timeout:p=0.5")
+
+
+def test_chaos_workload_zero_unhandled_exceptions():
+    spec = os.environ.get(faultinject.ENV_VAR) or DEFAULT_CHAOS_SPEC
+    work = _rgb_u8(6, seed=11) + _gray_f32(2, lo=28, hi=31, seed=12)
+    work.append(np.zeros((4, 4, 7), np.uint8))     # malformed rides along
+    eng = CvEngine(buckets=((32, 32),), max_batch=4, max_kp=8)
+    with faultinject.inject(spec):
+        res = eng.extract(work)
+    assert all(r is not None for r in res)
+    assert all(r.ok for r in res[:-1])             # every well-formed frame
+    assert not res[-1].ok
