@@ -12,7 +12,7 @@ test:            ## tier-1 verify
 	python -m pytest -x -q
 
 lint:            ## ruff check + format ratchet (CI pins ruff==0.9.9)
-	ruff check src/repro/kernels src/repro/core src/repro/cv benchmarks
+	ruff check src/repro/kernels src/repro/core src/repro/cv src/repro/serve benchmarks tests
 	ruff format --check src benchmarks tests
 
 bench-quick:     ## quick benchmark pass (writes BENCH_results.json)

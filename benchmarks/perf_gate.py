@@ -3,8 +3,11 @@ recorded perf trajectory regresses.
 
 Rules:
 
-  1. Absolute floor — the acceptance chain (gauss -> erode -> thresh) must
-     keep ``fused_speedup >= 1.2`` vs the staged per-op path.
+  1. Absolute floors — the acceptance chain (gauss -> erode -> thresh)
+     must keep ``fused_speedup >= 1.2`` vs the staged per-op path, and
+     since the tiled2d plan landed (with it, the four-plan auto-mode
+     routing the warp row's `fused_best_s` records) the warp chain must
+     too: ``fused_speedup >= 1.2`` on warp rows.
   2. Streaming beats window — the deep-ladder rows (octave, warp, and the
      multi-octave pyramid) must show the streaming plan no slower than the
      overlapping-window plan (the PR-4 claim; fires on CI --quick runs
@@ -14,8 +17,9 @@ Rules:
      that measured the same row (bench + shape + requested mode knob;
      --quick and full rows are never compared against each other).  A 15%
      relative tolerance absorbs CI-runner wall-clock noise.  Every
-     comparison is printed as a delta line so the job log shows exactly
-     which previous entry each row was gated against.
+     comparison is printed as a delta line — including each row's winning
+     execution plan (`fused_mode`) — so the job log shows exactly which
+     previous entry each row was gated against and which plan won it.
 
 Flags:
 
@@ -50,6 +54,7 @@ import sys
 from .common import RESULTS_PATH, match_row, row_key
 
 MIN_PIPELINE_SPEEDUP = 1.2
+MIN_WARP_SPEEDUP = 1.2           # warp-chain floor (since tiled2d landed)
 REGRESSION_TOLERANCE = 0.85      # current >= 0.85 * previous
 STREAM_VS_WINDOW_TOLERANCE = 1.1  # streaming <= 1.1 * window on ladders
 
@@ -74,6 +79,13 @@ def check(data: dict, *, mode: str | None = None,
         if sp is not None and sp < MIN_PIPELINE_SPEEDUP:
             fails.append(f"pipeline {row.get('batch')}: fused_speedup {sp} "
                          f"< {MIN_PIPELINE_SPEEDUP} floor")
+
+    for row in _gated(data, "warp", mode):
+        sp = row.get("fused_speedup")
+        if sp is not None and sp < MIN_WARP_SPEEDUP:
+            fails.append(f"warp {row.get('image')}: fused_speedup {sp} "
+                         f"< {MIN_WARP_SPEEDUP} floor (auto-mode winner "
+                         f"{row.get('fused_mode')!r})")
 
     for bench in LADDER_BENCHES:
         for row in _gated(data, bench, mode):
@@ -112,7 +124,10 @@ def check(data: dict, *, mode: str | None = None,
                 # the visible delta line: which entry this row was gated
                 # against, and by how much it moved
                 print(f"  delta {bench} {dict(key)}: fused_speedup "
-                      f"{prev_sp} -> {sp} vs {prev_entry.get('sha')} "
+                      f"{prev_sp} -> {sp} "
+                      f"[mode {prev.get('fused_mode')} -> "
+                      f"{row.get('fused_mode')}] "
+                      f"vs {prev_entry.get('sha')} "
                       f"{prev_entry.get('date')} "
                       f"({(sp / prev_sp - 1) * 100:+.1f}%)")
                 floor = prev_sp * REGRESSION_TOLERANCE
@@ -155,7 +170,8 @@ def check(data: dict, *, mode: str | None = None,
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--mode", default=None,
-                    choices=[None, "both", "streaming", "window"],
+                    choices=[None, "both", "streaming", "tiled2d", "window",
+                             "ref"],
                     help="gate only rows recorded with this modes_timed "
                          "knob (Makefile MODE passthrough)")
     ap.add_argument("--require-history", action="store_true",
@@ -175,7 +191,7 @@ def main(argv=None) -> int:
         for f_ in fails:
             print(f"  - {f_}")
         return 1
-    print("perf_gate: OK (acceptance floor + streaming-vs-window + "
+    print("perf_gate: OK (acceptance + warp floors + streaming-vs-window + "
           "history regression checks"
           + (", history required" if args.require_history else "") + ")")
     return 0

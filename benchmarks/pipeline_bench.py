@@ -9,15 +9,18 @@ Pallas kernels in interpret mode on this host, so the wall-clock ratio
 isolates exactly what fusion removes: launches, pad/crop traffic, and the
 per-stage HBM round trips.
 
-Every fused chain is timed in BOTH execution plans (MODE=both, the
-default): `window` (PR-1..3 overlapping-window recompute) and `streaming`
-(PR-4 row-carry rings), and `autotune.measure_chain` caches the winner so
-the library's auto mode routes the same chain to the measured-cheapest
-plan.  Acceptance: fused lowers to exactly one pallas_call in both plans,
-the 3-stage chain is >= 1.3x staged, and the deep ladders (octave, warp)
-are >= 1.0x staged under streaming (they lose ~3-5x under window: the
-recomputed halo grows with chain depth); results land in
-BENCH_results.json.
+Every fused chain is timed in ALL execution plans (MODE=both, the
+default): `window` (PR-1..3 overlapping-window recompute), `streaming`
+(PR-4 row-carry rings), `tiled2d` (streaming plus the column-tile grid
+axis) and `ref` (the whole chain as ONE jitted XLA program — still fused
+at the program level, just without a pallas_call), and
+`autotune.measure_chain` caches the winner so the library's auto mode
+routes the same chain to the measured-cheapest plan.  `fused_best_s` /
+`fused_mode` record that winner per row — the time the auto-mode product
+path actually pays.  Acceptance: fused lowers to exactly one pallas_call
+in every pallas plan, the 3-stage chain is >= 1.3x staged, and the deep
+ladders (octave, warp) beat staged under the measured winner; results
+land in BENCH_results.json.
 """
 from __future__ import annotations
 
@@ -34,11 +37,16 @@ from .common import (flush_results, print_table, record_result,
 
 BLUR_K, ERODE_R, THRESH = 5, 1, 100.0
 
-PALLAS_MODES = ("window", "streaming")
+PALLAS_MODES = ("window", "streaming", "tiled2d")
+
+# every execution plan auto mode can route to: the pallas plans plus the
+# whole-chain jitted `ref` program (one XLA program, no per-op dispatch —
+# the honest fusion floor on hosts where pallas runs in interpret mode)
+ALL_MODES = PALLAS_MODES + ("ref",)
 
 
 def _modes(mode: str) -> tuple[str, ...]:
-    return PALLAS_MODES if mode == "both" else (mode,)
+    return ALL_MODES if mode == "both" else (mode,)
 
 
 def _time_modes(make_fn, arg, mode: str, n: int = 3) -> tuple[dict, dict]:
@@ -103,8 +111,11 @@ def run(*, quick: bool = False, mode: str = "both"):
 
     fused_out = fused(batch, vc, mode="window")
     stream_out = fused(batch, vc, mode="streaming")
+    tiled_out = fused(batch, vc, mode="tiled2d")
     assert (jnp.asarray(fused_out) == jnp.asarray(stream_out)).all(), \
         "streaming diverges from the overlapping-window plan"
+    assert (jnp.asarray(fused_out) == jnp.asarray(tiled_out)).all(), \
+        "tiled2d diverges from the overlapping-window plan"
     staged_out = staged_baseline(batch, vc)
     # chain border semantics differ only inside the accumulated-halo ring
     ph, pw = stencil.chain_halo(chain())
@@ -195,8 +206,7 @@ def run_octave(*, quick: bool = False, mode: str = "both"):
         assert n_calls == 1, (f"fused octave ({m}) lowered to {n_calls} "
                               "pallas_calls, want 1")
 
-    autotune.measure_chain(g, _octave_chain(), vc=vc,
-                           modes=PALLAS_MODES)     # deep ladder: pallas plans
+    autotune.measure_chain(g, _octave_chain(), vc=vc)   # all four plans
     times, fields = _time_modes(
         lambda m: (lambda x: features.gaussian_octave(
             x, n_scales=N_SCALES, vc=vc, mode=m)), g, mode)
@@ -264,7 +274,7 @@ def run_warp(*, quick: bool = False, mode: str = "both"):
         assert n_calls == 1, (f"warp chain ({m}) lowered to {n_calls} "
                               "pallas_calls, want 1")
 
-    autotune.measure_chain(g, chain, vc=vc, modes=PALLAS_MODES)
+    autotune.measure_chain(g, chain, vc=vc)
     times, fields = _time_modes(make_fused, g, mode)
     t_staged = time_stats(lambda x: staged_warp(x, M), g, n=3)
     speedup = t_staged["best_s"] / fields["fused_best_s"]
@@ -347,8 +357,7 @@ def run_pyramid(*, quick: bool = False, mode: str = "both"):
 
     # warm the per-octave-shape measured-mode cache (auto-mode pyramid
     # callers route each launch through its own shape key)
-    autotune.measure_pyramid(g, chains, vc=vc, modes=PALLAS_MODES,
-                             n=1 if quick else 3)
+    autotune.measure_pyramid(g, chains, vc=vc, n=1 if quick else 3)
 
     def make_fused(m):
         def run_bands(x):
@@ -452,7 +461,7 @@ if __name__ == "__main__":        # PYTHONPATH=src python -m benchmarks.pipeline
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--mode", default="both",
-                    choices=["both", "streaming", "window"])
+                    choices=["both", "streaming", "tiled2d", "window", "ref"])
     args = ap.parse_args()
     run(quick=args.quick, mode=args.mode)
     run_octave(quick=args.quick, mode=args.mode)

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from repro.configs import extra_inputs, reduced_config
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
-from repro.serve.engine import generate
+from repro.serve.cv_engine import generate
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="zamba2-2.7b")

@@ -1,18 +1,14 @@
-"""Block-width (lmul) selection — the paper's m8 ceiling as a VMEM rule.
+"""Measured-timing autotune + the shippable plan table.
 
-The paper fixes m4 because widened (extended-precision) intermediates
-occupy 2x the registers and m8 is the ISA maximum. The TPU analogue:
-a kernel declares its working set as a function of the tile size (input
-tiles, widened accumulators, halos); we pick the largest lmul whose total
-fits the VMEM budget, with double-buffering headroom.
-
-This module is also the single source of truth for the fused chain's row
-geometry (`chain_iface`: the exact per-stage image-coordinate walk) and
-its *streaming carry plan* (`chain_stream_plan`: how many already-computed
-rows each stage carries across grid steps in VMEM scratch rings), plus the
-measured-timing fallback (`measure_chain`) that picks the cheapest of the
-{streaming, overlapping-window, chain_ref-staged} execution plans per
-(chain signature, shape, dtype, backend) and caches the winner.
+The *model* half of autotuning — block-width (lmul) selection as a VMEM
+working-set rule, the chain row/column geometry walks, tile-width picking
+— lives in `repro.kernels.stencil.plan` (the fused engine's planner) and
+is re-exported here for compatibility.  This module owns the *measured*
+half: `measure_chain` times the {streaming, tiled2d, window, ref}
+execution plans on the real input and caches the winner per (chain
+signature, shape, dtype, vc, backend), and the on-disk cache is a
+schema-versioned, checksummed plan table (quarantine-on-corruption) that
+ships as a build-time artifact.
 """
 from __future__ import annotations
 
@@ -21,395 +17,41 @@ import json
 import os
 import time
 import warnings
-from dataclasses import dataclass
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.stencil.ir import WIDENING_OPS, resolve_chain  # noqa: F401
+from repro.kernels.stencil.plan import (LMULS, WorkingSet,  # noqa: F401
+                                        _round_lane, _StageShape,
+                                        chain_accumulated_halo, chain_iface,
+                                        chain_stream_plan, chain_working_set,
+                                        erode_working_set,
+                                        filter2d_working_set, pick_chain_lmul,
+                                        pick_lmul, pick_tile_plan,
+                                        pick_tile_w, plane_block,
+                                        pyramid_plan, stage_out_hw)
+
 from . import faultinject
 from .vector import VectorConfig
-
-LMULS = (8, 4, 2, 1)
-
-
-@dataclass(frozen=True)
-class WorkingSet:
-    """Bytes used per grid step as a function of the config."""
-    fn: Callable[[VectorConfig], int]
-    double_buffer: bool = True       # Pallas pipelines HBM->VMEM copies
-
-    def bytes(self, vc: VectorConfig) -> int:
-        b = self.fn(vc)
-        return 2 * b if self.double_buffer else b
-
-
-def pick_lmul(ws: WorkingSet, *, base: VectorConfig | None = None) -> VectorConfig:
-    """Largest lmul whose (double-buffered, widened) working set fits VMEM."""
-    vc = base or VectorConfig()
-    for lm in LMULS:
-        cand = vc.with_lmul(lm)
-        if ws.bytes(cand) <= cand.vmem_budget:
-            return cand
-    return vc.with_lmul(1)
-
-
-def _round_lane(vc: VectorConfig, width: int, halo: int) -> int:
-    wp = width + 2 * halo
-    return wp + (-wp) % vc.lane
-
-
-# ops whose intermediates widen to f32 in VMEM — the single source of truth;
-# kernels/stencil.py imports this (core stays import-free of kernels)
-WIDENING_OPS = frozenset({"filter2d", "sep_filter", "grad_mag", "affine",
-                          "box", "pyr_down", "resize2", "sobel",
-                          "pyr_up", "warp_affine", "remap"})
-
-
-def stage_out_hw(op: str | None, h: int, w: int) -> tuple[int, int]:
-    """Output (h, w) of one stage applied to an (h, w) image: replicate-border
-    halo ops preserve size; pyrDown is ceil-half (OpenCV), resize2 floor,
-    pyrUp doubles exactly.  Shared with kernels/stencil.py (its `_out_hw`)
-    so the cross-launch pyramid accounting below and the chain compiler can
-    never disagree about per-link geometry."""
-    if op == "pyr_down":
-        return (h + 1) // 2, (w + 1) // 2
-    if op == "resize2":
-        return h // 2, w // 2
-    if op == "pyr_up":
-        return 2 * h, 2 * w
-    return h, w
-
-
-@dataclass(frozen=True)
-class _StageShape:
-    """Minimal stage view for working-set accounting: op name + halo."""
-    op: str
-    halo: tuple
-
-
-def resolve_chain(stages):
-    """Static chain walk shared with kernels/stencil.py semantics.
-
-    Returns per-stage records ``(op, mode, halo, stride, up, bands_in,
-    bands_out, tap)`` where mode is one of map/tap/emit/reduce, ``up`` is
-    the (row, col) *upsample* factor (fractional stride: pyr_up is
-    (2, 2), everything else (1, 1)) and ``tap`` is the normalized
-    (non-negative) source band index for tap stages, else None.  Stages
-    are duck-typed: ``.op`` and ``.halo`` are required; ``.stride``
-    defaults to (1, 1), ``.upsample`` to (1, 1) and ``.tap`` (source band
-    index, appended output) to None.  The band arity rules are the IR
-    contract: ``sobel`` replaces the last band with a dx/dy pair,
-    ``grad_mag`` consumes the last two bands when at least two are live
-    (pairwise magnitude, halo 0) and otherwise stays the single-band
-    central-difference stage, tapped stages append their result.
-    """
-    n = 1
-    out = []
-    for s in stages:
-        op = s.op
-        tap = getattr(s, "tap", None)
-        stride = tuple(getattr(s, "stride", (1, 1)))
-        up = tuple(getattr(s, "upsample", (1, 1)))
-        halo = tuple(s.halo)
-        if op == "sobel":
-            if tap is not None:
-                raise ValueError("sobel stage does not support tap=")
-            mode, n2 = "emit", n + 1
-        elif op == "grad_mag" and n >= 2:
-            mode, halo, n2 = "reduce", (0, 0), n - 1
-        elif tap is not None:
-            if up != (1, 1):
-                raise ValueError(f"upsampling stage {op!r} does not support "
-                                 "tap= (mixed-resolution states are map-only)")
-            if not -n <= tap < n:
-                raise ValueError(f"stage {op!r}: tap={tap} out of range for "
-                                 f"{n} live band(s)")
-            tap = tap % n
-            mode, n2 = "tap", n + 1
-        else:
-            mode, n2 = "map", n
-        out.append((op, mode, halo, stride, up, n, n2, tap))
-        n = n2
-    for i, (op, mode, halo, stride, up, _, _, _) in enumerate(out):
-        if stride != (1, 1) and mode != "map" and i != len(out) - 1:
-            raise ValueError(f"strided {mode} stage {op!r} must be the final "
-                             "stage of the chain (geometry-changing taps are "
-                             "terminal)")
-    return out
-
-
-def chain_accumulated_halo(stages) -> tuple[int, int]:
-    """(row, col) halo of the whole chain in *input-resolution* units: each
-    stage's halo scaled by the net resolution factor before it (map strides
-    shrink downstream halos by their stride; upsamples shrink the scale, so
-    each contribution is the ceil of halo * down/up — over-padding is safe,
-    the replicate extension is value-identical at every coordinate)."""
-    ph = pw = 0
-    ny = nx = 1          # downsample product of the map stages walked so far
-    dy = dx = 1          # upsample product
-    for op, mode, halo, stride, up, _, _, _ in resolve_chain(stages):
-        ph += -(-halo[0] * ny // dy)
-        pw += -(-halo[1] * nx // dx)
-        if mode == "map":
-            ny *= stride[0]
-            nx *= stride[1]
-            dy *= up[0]
-            dx *= up[1]
-    return ph, pw
-
-
-def chain_iface(plan, rows: int) -> list:
-    """Exact backward row walk in image coordinates (shared with
-    kernels/stencil.py): ``iface[k] = (mult, off, r)`` means grid step i
-    consumes image rows ``[i*mult + off, i*mult + off + r)`` at stage k's
-    input resolution; ``iface[-1]`` is the final output band of `rows`
-    rows.  Subsumes ``R_in = R_out*stride + 2*halo`` and inverts it for
-    upsamples (``R_in = ceil(R_out/up) + 2*halo``, phase-exact).
-    `plan` is a `resolve_chain` record list."""
-    iface = [(rows, 0, rows)]
-    for op, mode, halo, stride, up, _, _, _ in reversed(plan):
-        mult, off, r = iface[0]
-        h = halo[0]
-        if mode == "map" and up[0] > 1:
-            if mult % up[0]:
-                raise ValueError(
-                    f"chain upsample {op!r}: band step {mult} is not "
-                    f"divisible by {up[0]} (use a larger lmul or fewer "
-                    "stacked upsamples)")
-            off2 = off // up[0] - h
-            end2 = (off + r - 1) // up[0] + h + 1
-            iface.insert(0, (mult // up[0], off2, end2 - off2))
-        elif mode == "map":
-            s = stride[0]
-            iface.insert(0, (mult * s, s * off - h, s * r + 2 * h))
-        else:
-            iface.insert(0, (mult, off - h, r + 2 * h))
-    return iface
-
-
-def chain_stream_plan(plan, iface) -> list:
-    """Streaming carry plan: per stage ``(sin_off, sin_r, ring_rows,
-    d_rows)``.
-
-    In streaming mode each grid step computes only the *new* rows of every
-    stage's output stream — the ``mult`` rows the step advances by — and
-    carries the halo overlap in a persistent VMEM scratch ring instead of
-    recomputing it from the enlarged window.  Stage k's body input per
-    step is the backward rule applied to its new-output window (the top
-    ``mult_out`` rows of ``iface[k+1]``): rows ``[i*mult_k + sin_off,
-    ... + sin_r)``, of which the stage's ring carries the first
-    ``ring_rows = sin_r - mult_k`` (= ``2*halo``; ``2*halo + 1`` for an
-    odd-phase upsample) and the upstream stage's current step supplies the
-    last ``mult_k``.  ``d_rows`` is the delay FIFO depth (= the stage
-    halo) that pass-through bands of a tap/emit stage carry so the whole
-    band state stays row-aligned."""
-    out = []
-    for k, (op, mode, halo, stride, up, n_in, n_out, tap) in enumerate(plan):
-        mult_k, off_k, r_k = iface[k]
-        mult_o, off_o, r_o = iface[k + 1]
-        top_o = off_o + r_o
-        h = halo[0]
-        if mode == "map" and up[0] > 1:
-            sin_off = (top_o - mult_o) // up[0] - h
-            sin_r = (top_o - 1) // up[0] + h + 1 - sin_off
-        elif mode == "map":
-            s = stride[0]
-            sin_off = s * (top_o - mult_o) - h
-            sin_r = s * mult_o + 2 * h
-        else:
-            sin_off = (top_o - mult_o) - h
-            sin_r = mult_o + 2 * h
-        ring_rows = sin_r - mult_k
-        if sin_off + sin_r != off_k + r_k or not 0 <= ring_rows <= r_k:
-            raise AssertionError(
-                f"chain_stream_plan: stage {k} ({op}) carry window "
-                f"[{sin_off}, {sin_off + sin_r}) misaligned with window "
-                f"interface [{off_k}, {off_k + r_k})")
-        out.append((sin_off, sin_r, ring_rows, h if mode != "map" else 0))
-    return out
-
-
-def chain_working_set(stages, width: int, in_dtype=jnp.uint8, *,
-                      streaming: bool = False) -> WorkingSet:
-    """Working set of a fused stage chain — mirrors kernels/stencil.py.
-
-    Window (default) mode: one overlapping input window whose rows follow
-    the backward recurrence ``R_in = R_out * stride + 2*halo`` (so strided
-    stages account for their pre-decimation geometry), then per stage its
-    in-bands and out-bands (f32 for widening ops, carrier dtype otherwise)
-    times the number of live bands — a tap ladder keeps every emitted band
-    VMEM-resident, so working set grows with band count — plus the packed
-    output bands.
-
-    ``streaming=True`` charges the *carry-plan* footprint instead: the
-    same input window DMA, but each stage's body only holds its
-    ring-plus-new-rows buffer (`chain_stream_plan`) — strictly smaller for
-    deep chains, so `pick_chain_lmul` / `plane_block` can choose wider
-    blocks.  `stages` is duck-typed (``.op``/``.halo``; optional
-    ``.stride``/``.tap``).
-    """
-    plan = resolve_chain(stages)
-    ph_in, pw_in = chain_accumulated_halo(stages)
-    itemsize = jnp.dtype(in_dtype).itemsize
-    # constant per-step inputs (filter taps, remap's map planes) are resident
-    # every grid step — a remap's two full-size f32 map bands are the
-    # dominant term and must be charged, not ignored
-    w_bytes = sum(int(w.size) * jnp.dtype(w.dtype).itemsize
-                  for s in stages for w in getattr(s, "weights", ()))
-
-    def fn(vc: VectorConfig) -> int:
-        rows = vc.rows(in_dtype)
-        iface = chain_iface(plan, rows)
-        sp = chain_stream_plan(plan, iface) if streaming else None
-        wp = _round_lane(vc, width, pw_in)
-        total = iface[0][2] * wp * itemsize + w_bytes    # input window DMA
-        num, den = 1, 1                # net width scale so far (down / up)
-        sizes = [itemsize]                 # live-band element sizes (bytes):
-        for k, (op, mode, halo, stride, up, n_in, n_out, tap) in enumerate(plan):
-            wp_s = max(vc.lane, wp * den // num)        # f32 downstream
-            widen = op in WIDENING_OPS
-            n_part = n_in if mode == "map" else 1        # participating bands
-            if sp is None:
-                r_in = iface[k][2]
-                out_r = iface[k + 1][2]
-                # in-side: every live band is resident; each participating
-                # band of a widening op also holds a full f32 expansion
-                total += sum(r_in * wp_s * sz for sz in sizes)
-            else:
-                sin_off, r_in, ring_rows, d_rows = sp[k]
-                out_r = iface[k + 1][0]                  # new rows only
-                # body buffer + its scratch ring per participating band;
-                # pass-through bands hold their new rows + delay FIFO
-                if mode == "map":
-                    total += sum((r_in + ring_rows) * wp_s * sz
-                                 for sz in sizes)
-                else:
-                    psz = sizes[tap if mode == "tap" else -1]
-                    total += (r_in + ring_rows) * wp_s * psz
-                    total += sum((iface[k][0] + d_rows) * wp_s * sz
-                                 for sz in sizes)
-            if widen:
-                total += n_part * r_in * wp_s * 4
-            if mode == "emit":
-                sizes = sizes[:-1] + [4, 4]
-            elif mode == "reduce":
-                sizes = sizes[:-2] + [itemsize]
-            elif mode == "tap":
-                sizes = sizes + [sizes[tap]]
-            # out-side: f32 accumulators of widening participants + every
-            # band packed at its own dtype, resident until the store —
-            # upsampled bands are charged at their post-upsample (doubled)
-            # rows and width
-            wp_out = max(vc.lane, wp_s * (up[1] if mode == "map" else 1))
-            if widen:
-                total += n_part * out_r * wp_out * 4
-            total += sum(out_r * wp_out * sz for sz in sizes)
-            if mode == "map":
-                num *= stride[1]
-                den *= up[1]
-        total += rows * wp * itemsize                    # store band(s)
-        return total
-    return WorkingSet(fn)
-
-
-def pick_chain_lmul(stages, width: int, in_dtype=jnp.uint8, *,
-                    base: VectorConfig | None = None,
-                    streaming: bool = False) -> VectorConfig:
-    """Chain-aware block-width selection: largest lmul whose accumulated-halo,
-    widened working set fits VMEM (the paper's m8 ceiling, per chain)."""
-    return pick_lmul(chain_working_set(stages, width, in_dtype,
-                                       streaming=streaming), base=base)
-
-
-def plane_block(stages, width: int, n_planes: int, vc: VectorConfig,
-                in_dtype=jnp.uint8, *, streaming: bool = False) -> int:
-    """Planes per grid step: the second register-block dimension.
-
-    Batched/multi-channel inputs give the fused kernel an extra axis to
-    amortize per-grid-step overhead over; pick the largest power-of-two
-    plane count whose combined working set still fits the VMEM budget
-    (same ceiling rule as the lmul knob)."""
-    ws = chain_working_set(stages, width, in_dtype, streaming=streaming)
-    per_plane = ws.bytes(vc)
-    p = 1
-    while (p * 2 <= n_planes and (p * 2) * per_plane <= vc.vmem_budget):
-        p *= 2
-    return p
-
-
-def pyramid_plan(chains, shape, in_dtype=jnp.float32, *,
-                 streaming: bool = True,
-                 base: VectorConfig | None = None) -> list[dict]:
-    """Static per-link accounting for a cross-launch pyramid
-    (`stencil.chained_launches`): the shrinking per-octave plane geometry,
-    the block width the working-set rule picks for each link, and the
-    pyramid-tail `chain_ref` fallback.
-
-    `chains` is a sequence of stage chains where every non-final chain ends
-    with a strided terminal tap (the next_base contract) — link k+1's input
-    is that tap's output geometry.  Per link the record holds::
-
-        {"shape": (h, w)    — the link's input planes,
-         "halo": (ph, pw)   — its chain's accumulated halo,
-         "fallback": bool   — planes <= halo: fused_chain routes this link
-                              to ref.chain_ref (no launch, no working set),
-         "lmul": int | None — pick_chain_lmul's choice for the link's
-                              width (None when the link falls back); the
-                              tail links' smaller planes admit wider
-                              blocks, which is why autotune keys must be
-                              per-octave-shape, not per-pyramid}
-
-    The launch count of the pyramid is ``sum(not r["fallback"])``."""
-    h, w = int(shape[0]), int(shape[1])
-    out = []
-    for k, stages in enumerate(chains):
-        stages = tuple(stages)
-        ph, pw = chain_accumulated_halo(stages)
-        fallback = h <= ph or w <= pw
-        vc = (None if fallback else
-              pick_chain_lmul(stages, w, in_dtype, base=base,
-                              streaming=streaming))
-        out.append({"shape": (h, w), "halo": (ph, pw), "fallback": fallback,
-                    "lmul": None if fallback else vc.lmul})
-        if k < len(chains) - 1:
-            # the carry band is the final stage's strided terminal tap:
-            # walk the map-stage geometry, then apply the tap's own rule
-            hc, wc = h, w
-            for op, mode, halo, stride, up, _, _, _ in resolve_chain(stages):
-                if mode == "map":
-                    hc, wc = stage_out_hw(op, hc, wc)
-            h, w = stage_out_hw(stages[-1].op, hc, wc)
-    return out
-
-
-def filter2d_working_set(width: int, ksize: int, in_dtype=jnp.uint8) -> WorkingSet:
-    """Single filter2d stage: widened f32 band w/ halo + f32 accumulator."""
-    h = ksize // 2
-    return chain_working_set((_StageShape("filter2d", (h, h)),), width, in_dtype)
-
-
-def erode_working_set(width: int, ksize: int, in_dtype=jnp.uint8) -> WorkingSet:
-    """No widening: min/max closed over u8."""
-    return chain_working_set((_StageShape("erode", (ksize, ksize)),), width, in_dtype)
-
 
 # ---------------------------------------------------------------------------
 # Measured-timing fallback: pick the cheapest execution plan per chain.
 #
-# The model above sizes blocks; it cannot decide *which plan* wins on a
-# given backend (a 3x3 filter's fused launch can lose to the staged jnp
-# path on CPU interpret, while a deep ladder only wins streaming).
-# `measure_chain` times the {streaming, window, ref} candidates on the
-# real input and caches the winner per (chain signature, shape, dtype,
-# backend).  `fused_chain(mode=None)` consults the in-process cache; the
-# on-disk copy (REPRO_AUTOTUNE_CACHE, default ~/.cache/repro/) is written
-# for inspection (`python -m repro.core.autotune --show-cache`) and only
-# *read* back when REPRO_AUTOTUNE_CACHE_READ=1, so test runs stay
+# The working-set model sizes blocks; it cannot decide *which plan* wins on
+# a given backend (a 3x3 filter's fused launch can lose to the staged jnp
+# path on CPU interpret, while a deep ladder only wins streaming, and
+# tiled2d only pays off when tiling unlocks a larger lmul).
+# `measure_chain` times the {streaming, tiled2d, window, ref} candidates
+# on the real input and caches the winner per (chain signature, shape,
+# dtype, backend).  `fused_chain(mode=None)` consults the in-process
+# cache; the on-disk copy (REPRO_AUTOTUNE_CACHE, default ~/.cache/repro/)
+# is written for inspection (`python -m repro.core.autotune --show-cache`)
+# and only *read* back when REPRO_AUTOTUNE_CACHE_READ=1, so test runs stay
 # deterministic.
 # ---------------------------------------------------------------------------
 
-CHAIN_MODES = ("streaming", "window", "ref")
+CHAIN_MODES = ("streaming", "tiled2d", "window", "ref")
 
 _MODE_CACHE: dict[str, dict] = {}
 _DISK_CACHE_LOADED = False
@@ -607,11 +249,12 @@ def measure_chain(img, stages, *, vc: VectorConfig | None = None,
                   n: int = 3, modes=CHAIN_MODES, persist: bool = True,
                   deadline_s: float | None = None, watchdog=None) -> dict:
     """Time the execution-plan candidates on a concrete input and cache the
-    winner: streaming (row-carry rings), window (overlapping-window
-    recompute) and ref (the staged `ref.chain_ref` jnp path — the cheapest
-    plan for small single-stage chains on CPU backends).  Returns
-    ``{"mode": winner, "times": {mode: best_s}}`` and records it so
-    `fused_chain(mode=None)` routes this chain automatically.
+    winner: streaming (row-carry rings), tiled2d (streaming + column
+    tiles), window (overlapping-window recompute) and ref (the staged
+    `ref.chain_ref` jnp path — the cheapest plan for small single-stage
+    chains on CPU backends).  Returns ``{"mode": winner, "times": {mode:
+    best_s}}`` and records it so `fused_chain(mode=None)` routes this
+    chain automatically.
 
     ``deadline_s`` bounds the whole measurement: once exceeded, remaining
     candidates are skipped and the winner is picked from what was timed

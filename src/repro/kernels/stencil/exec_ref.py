@@ -1,0 +1,23 @@
+"""Ref executor — the `mode="ref"` plan: the staged `ref.chain_ref` jnp
+path, jit-compiled, no Pallas launch.  The measured autotune routes small
+single-stage chains here on backends where a fused launch loses, and it is
+the degradation ladder's always-lowerable floor."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref
+
+from . import ir
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def chain_ref_planes(img: Array, weights: tuple, spec: tuple):
+    """The staged `ref.chain_ref` path must ship the same XLA program the
+    measured autotune timed (eager chain_ref pays per-op dispatch that the
+    measurement — and any serious caller — does not)."""
+    return ref.chain_ref(img, ir.respec(spec, weights))

@@ -1,0 +1,386 @@
+"""Stage IR — the declarative layer of the fused stencil-chain package.
+
+One `Stage` is one pipeline op: a name, hashable static params baked into
+the trace, and tap arrays (filter weights / remap map planes) that stay
+ordinary traced inputs.  This module owns everything *declarative*:
+
+  * the op table (`_N_WEIGHTS`, `_STRIDES`, `_UPSAMPLES`, `_GATHER_OPS`,
+    `WIDENING_OPS`) and the `Stage` dataclass with its halo/stride rules;
+  * the stage builders (`filter_stage` ... `remap_stage`);
+  * `resolve_chain` — the static chain walk that assigns each stage its
+    band-arity mode (map / tap / emit / reduce) and validates the IR
+    contract (strided taps are terminal, upsamples are map-only, ...);
+  * `validate_next_base` — the cross-launch pyramid-link contract;
+  * the displacement-bound helpers the gather stages and the planner
+    (`..plan`) share, so declaration and validation can never diverge.
+
+No geometry walks (see `plan.py`) and no executors (see `exec_*.py`)
+live here; this module must stay importable without Pallas.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+Array = jax.Array
+
+# number of tap arrays each op carries as pallas inputs (remap's two are its
+# full-size map planes — per-step-resident chain bands, not filter taps)
+_N_WEIGHTS = {"filter2d": 1, "sep_filter": 2, "erode": 0, "dilate": 0,
+              "threshold": 0, "affine": 0, "grad_mag": 0, "box": 0,
+              "pyr_down": 1, "resize2": 0, "sobel": 0,
+              "warp_affine": 0, "remap": 2, "pyr_up": 0}
+# output decimation per stage kind (all other ops preserve geometry)
+_STRIDES = {"pyr_down": (2, 2), "resize2": (2, 2)}
+# fractional strides: output *upsample* factor per stage kind
+_UPSAMPLES = {"pyr_up": (2, 2)}
+# gather stages: in-kernel bodies read data-dependent (statically bounded)
+# offsets and need the band's absolute image coordinates
+_GATHER_OPS = frozenset({"warp_affine", "remap"})
+# ops whose intermediates widen to f32 in VMEM — shared with the planner's
+# working-set accounting (plan.chain_working_set)
+WIDENING_OPS = frozenset({"filter2d", "sep_filter", "grad_mag", "affine",
+                          "box", "pyr_down", "resize2", "sobel",
+                          "pyr_up", "warp_affine", "remap"})
+
+
+def _gather_halo(by: float, bx: float) -> tuple[int, int]:
+    """Halo a gather stage consumes per side for a (row, col) displacement
+    bound: floor(b) rows of reach + 1 for the far bilinear tap."""
+    return int(math.floor(by)) + 1, int(math.floor(bx)) + 1
+
+
+# ---------------------------------------------------------------------------
+# Stage dataclass
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Stage:
+    """One pipeline stage: `op` + hashable static params + tap arrays.
+
+    `static` is baked into the jit/pallas trace; `weights` (filter taps) are
+    ordinary traced inputs so re-running with new taps does not recompile.
+    `tap` (a band index, negatives allowed) switches the stage from
+    *mapping over* the band state to *appending* its result: the op reads
+    band `tap` and the new band is appended to the state.
+    """
+    op: str
+    static: tuple = ()
+    weights: tuple = field(default_factory=tuple)
+    tap: int | None = None
+
+    def __post_init__(self):
+        if self.op not in _N_WEIGHTS:
+            raise ValueError(f"unknown stage op {self.op!r}")
+        if len(self.weights) != _N_WEIGHTS[self.op]:
+            raise ValueError(f"{self.op} takes {_N_WEIGHTS[self.op]} weight "
+                             f"arrays, got {len(self.weights)}")
+
+    @property
+    def halo(self) -> tuple[int, int]:
+        """(row, col) halo this stage consumes per side (single-band form;
+        chain walkers resolve the arity-dependent grad_mag case)."""
+        if self.op == "filter2d":
+            kh, kw = self.weights[0].shape
+            return kh // 2, kw // 2
+        if self.op == "sep_filter":
+            kx, ky = self.weights
+            return ky.shape[0] // 2, kx.shape[0] // 2
+        if self.op in ("erode", "dilate", "box"):
+            return self.static[0], self.static[0]
+        if self.op in ("grad_mag", "sobel", "pyr_up"):
+            return 1, 1
+        if self.op == "pyr_down":
+            return 2, 2
+        if self.op == "warp_affine":
+            return _gather_halo(self.static[6], self.static[7])
+        if self.op == "remap":
+            by, bx, ey, ex = self.static
+            return _gather_halo(by + ey, bx + ex)
+        return 0, 0
+
+    @property
+    def stride(self) -> tuple[int, int]:
+        """(row, col) output decimation factor."""
+        return _STRIDES.get(self.op, (1, 1))
+
+    @property
+    def upsample(self) -> tuple[int, int]:
+        """(row, col) output upsample factor (fractional stride)."""
+        return _UPSAMPLES.get(self.op, (1, 1))
+
+
+# ---------------------------------------------------------------------------
+# Stage builders
+# ---------------------------------------------------------------------------
+
+def filter_stage(kernel: Array, *, tap: int | None = None) -> Stage:
+    """Direct 2D correlation with an odd (kh, kw) tap matrix."""
+    kernel = jnp.asarray(kernel, jnp.float32)
+    return Stage("filter2d", weights=(kernel,), tap=tap)
+
+
+def sep_filter_stage(kx: Array, ky: Array, *, tap: int | None = None) -> Stage:
+    """Separable filter: row taps kx (kw,), then column taps ky (kh,)."""
+    return Stage("sep_filter", tap=tap,
+                 weights=(jnp.asarray(kx, jnp.float32), jnp.asarray(ky, jnp.float32)))
+
+
+def gaussian_stage(ksize: int, sigma: float | None = None, *,
+                   tap: int | None = None) -> Stage:
+    """OpenCV GaussianBlur as a separable stage."""
+    k1 = ref.gaussian_kernel1d(ksize, sigma)
+    return sep_filter_stage(k1, k1, tap=tap)
+
+
+def erode_stage(r: int) -> Stage:
+    """Rectangular (2r+1)^2 erosion."""
+    return Stage("erode", static=(int(r),))
+
+
+def dilate_stage(r: int) -> Stage:
+    return Stage("dilate", static=(int(r),))
+
+
+def box_stage(r: int, *, tap: int | None = None) -> Stage:
+    """OpenCV blur(): normalized (2r+1)^2 box filter."""
+    return Stage("box", static=(int(r),), tap=tap)
+
+
+def threshold_stage(thresh: float, maxval: float = 255.0) -> Stage:
+    """Binary threshold: maxval where x > thresh else 0 (OpenCV THRESH_BINARY).
+    The comparison runs in f32 so fractional thresholds are honored on
+    integer carriers (127.5 on u8 means x >= 128, not x > 127)."""
+    return Stage("threshold", static=(float(thresh), float(maxval)))
+
+
+def affine_stage(scale: float, offset: float = 0.0) -> Stage:
+    """Pointwise saturating scale*x + offset (OpenCV convertScaleAbs-style)."""
+    return Stage("affine", static=(float(scale), float(offset)))
+
+
+def grad_stage() -> Stage:
+    """Gradient magnitude sqrt(dx^2 + dy^2).
+
+    On a single-band state: central-difference gradients (halo 1).  After a
+    `sobel_stage()` (or any >= 2-band state): consumes the last two bands as
+    the dx/dy pair (halo 0)."""
+    return Stage("grad_mag")
+
+
+def sobel_stage() -> Stage:
+    """OpenCV Sobel ksize=3 pair: replaces the last band with widened f32
+    dx = [1,2,1]^T (x) [-1,0,1] and dy = dx^T bands."""
+    return Stage("sobel")
+
+
+def pyr_down_stage(*, tap: int | None = None) -> Stage:
+    """OpenCV pyrDown: 5-tap [1,4,6,4,1]/16 separable Gaussian + 2x
+    decimation on even image coordinates; out = ceil(size/2).  As a map
+    stage it downsamples the whole state mid-chain; as a terminal tap it
+    emits the next pyramid octave's base alongside the full-res outputs."""
+    k1 = jnp.asarray([1.0, 4.0, 6.0, 4.0, 1.0], jnp.float32) / 16.0
+    return Stage("pyr_down", weights=(k1,), tap=tap)
+
+
+def resize2_stage(*, tap: int | None = None) -> Stage:
+    """2x downsample by 2x2 mean (cv.imgproc.resize_half); out = floor(size/2)."""
+    return Stage("resize2", tap=tap)
+
+
+def _affine_disp_over(m, min_y, max_y, min_x, max_x) -> tuple[float, float]:
+    """Max (row, col) |dst->src displacement| of the 2x3 affine m over a
+    coordinate rectangle.  Displacement is affine in (x, y), so the max
+    sits at the rectangle's corners.  Shared by `affine_disp_bound` (the
+    declaration side) and the planner's validation (the check side) so the
+    two can never diverge."""
+    by = bx = 0.0
+    for yc in (float(min_y), float(max_y)):
+        for xc in (float(min_x), float(max_x)):
+            bx = max(bx, abs(m[0][0] * xc + m[0][1] * yc + m[0][2] - xc))
+            by = max(by, abs(m[1][0] * xc + m[1][1] * yc + m[1][2] - yc))
+    return by, bx
+
+
+def affine_disp_bound(M, shape, *, extend=(0, 0)) -> tuple[float, float]:
+    """Max (row, col) |dst->src displacement| of the inverse-map affine M over
+    the (h, w) image rectangle extended by `extend` per side (the halo ring
+    a fused chain's later stages evaluate the warp at)."""
+    m = np.asarray(M, np.float64).reshape(2, 3)
+    h, w = int(shape[0]), int(shape[1])
+    ey, ex = extend
+    return _affine_disp_over(m, -float(ey), h - 1.0 + ey,
+                             -float(ex), w - 1.0 + ex)
+
+
+def warp_affine_stage(M, *, bound=None, shape=None, extend=(0, 0),
+                      tap: int | None = None) -> Stage:
+    """Inverse-map affine warp (OpenCV warpAffine with WARP_INVERSE_MAP):
+    dst(x, y) = bilinear src sample at (M00*x + M01*y + M02,
+    M10*x + M11*y + M12), replicate border.
+
+    The first *gather* stage: the in-kernel body reads data-dependent (but
+    statically bounded) offsets, so M is baked static — its per-band halo is
+    the ceil of the displacement bound of M over the evaluation rectangle.
+    Declare that bound explicitly via `bound=(rows, cols)` or let
+    `shape=(h, w)` (+ `extend=(rows, cols)` when later chain stages consume
+    a halo ring) compute it; the chain planner re-validates against the
+    actual fused window and raises if the declared bound is too small."""
+    m = np.asarray(M, np.float64).reshape(2, 3)
+    if bound is None:
+        if shape is None:
+            raise ValueError("warp_affine_stage: pass bound=(rows, cols) or "
+                             "shape=(h, w) to size the gather halo")
+        bound = affine_disp_bound(m, shape, extend=extend)
+    static = tuple(float(v) for v in m.reshape(-1))
+    static += (float(bound[0]), float(bound[1]))
+    return Stage("warp_affine", static=static, tap=tap)
+
+
+def remap_stage(map_x, map_y, *, bound=None, extend=(0, 0),
+                tap: int | None = None) -> Stage:
+    """OpenCV remap: dst(x, y) = bilinear src sample at
+    (map_x[y, x], map_y[y, x]), replicate border.
+
+    The (H, W) f32 map planes enter the chain as extra per-step-resident
+    input bands (charged by `plan.chain_working_set`).  `bound` is the
+    max in-image (row, col) displacement |map - identity| — computed from
+    the maps when omitted (pass it explicitly when the maps are traced
+    under jit) — and `extend` budgets the extra displacement of
+    downstream-halo-ring evaluation, where out-of-image lookups clamp to
+    the map edge so displacement grows 1:1 with the overhang."""
+    mx = jnp.asarray(map_x, jnp.float32)
+    my = jnp.asarray(map_y, jnp.float32)
+    if mx.ndim != 2 or mx.shape != my.shape:
+        raise ValueError("remap_stage: map planes must share one (H, W) "
+                         f"shape, got {mx.shape} and {my.shape}")
+    if bound is None:
+        if isinstance(mx, jax.core.Tracer) or isinstance(my, jax.core.Tracer):
+            raise ValueError("remap_stage: map planes are traced (under jit), "
+                             "so the displacement bound cannot be derived "
+                             "from them — pass bound=(rows, cols) explicitly")
+        mxn, myn = np.asarray(mx), np.asarray(my)
+        hm, wm = myn.shape
+        bound = (float(np.max(np.abs(myn - np.arange(hm)[:, None]))),
+                 float(np.max(np.abs(mxn - np.arange(wm)[None, :]))))
+    static = (float(bound[0]), float(bound[1]),
+              float(extend[0]), float(extend[1]))
+    return Stage("remap", static=static, weights=(mx, my), tap=tap)
+
+
+def pyr_up_stage() -> Stage:
+    """OpenCV pyrUp: 2x zero-insert upsample convolved with the 5-tap
+    [1,4,6,4,1]/16 Gaussian x4 — per axis the even phase is [1,6,1]/8 and
+    the odd phase [4,4]/8; out = 2*size exactly.
+
+    The first fractional-stride stage: `stage_out_hw` doubles and the
+    planner *inverts* the window recurrence (R_in = ceil(R_out/2) + 2*halo),
+    interleaving the even/odd output phases in VMEM.  Map-only (upsampled
+    taps would make the band state mixed-resolution mid-chain)."""
+    return Stage("pyr_up")
+
+
+# ---------------------------------------------------------------------------
+# Static chain resolution (band-arity walk) + cross-launch contract
+# ---------------------------------------------------------------------------
+
+def resolve_chain(stages):
+    """Static chain walk — the IR contract every planner/executor consumes.
+
+    Returns per-stage records ``(op, mode, halo, stride, up, bands_in,
+    bands_out, tap)`` where mode is one of map/tap/emit/reduce, ``up`` is
+    the (row, col) *upsample* factor (fractional stride: pyr_up is
+    (2, 2), everything else (1, 1)) and ``tap`` is the normalized
+    (non-negative) source band index for tap stages, else None.  Stages
+    are duck-typed: ``.op`` and ``.halo`` are required; ``.stride``
+    defaults to (1, 1), ``.upsample`` to (1, 1) and ``.tap`` (source band
+    index, appended output) to None.  The band arity rules are the IR
+    contract: ``sobel`` replaces the last band with a dx/dy pair,
+    ``grad_mag`` consumes the last two bands when at least two are live
+    (pairwise magnitude, halo 0) and otherwise stays the single-band
+    central-difference stage, tapped stages append their result.
+    """
+    n = 1
+    out = []
+    for s in stages:
+        op = s.op
+        tap = getattr(s, "tap", None)
+        stride = tuple(getattr(s, "stride", (1, 1)))
+        up = tuple(getattr(s, "upsample", (1, 1)))
+        halo = tuple(s.halo)
+        if op == "sobel":
+            if tap is not None:
+                raise ValueError("sobel stage does not support tap=")
+            mode, n2 = "emit", n + 1
+        elif op == "grad_mag" and n >= 2:
+            mode, halo, n2 = "reduce", (0, 0), n - 1
+        elif tap is not None:
+            if up != (1, 1):
+                raise ValueError(f"upsampling stage {op!r} does not support "
+                                 "tap= (mixed-resolution states are map-only)")
+            if not -n <= tap < n:
+                raise ValueError(f"stage {op!r}: tap={tap} out of range for "
+                                 f"{n} live band(s)")
+            tap = tap % n
+            mode, n2 = "tap", n + 1
+        else:
+            mode, n2 = "map", n
+        out.append((op, mode, halo, stride, up, n, n2, tap))
+        n = n2
+    for i, (op, mode, halo, stride, up, _, _, _) in enumerate(out):
+        if stride != (1, 1) and mode != "map" and i != len(out) - 1:
+            raise ValueError(f"strided {mode} stage {op!r} must be the final "
+                             "stage of the chain (geometry-changing taps are "
+                             "terminal)")
+    return out
+
+
+def validate_next_base(stages) -> int:
+    """Check the next_base terminal-tap contract and return the carry band.
+
+    A chain that feeds a *subsequent* `fused_chain` launch (a pyramid link)
+    must end with a strided terminal tap — e.g. `pyr_down_stage(tap=...)` —
+    so its LAST output band is the downsampled base of the next launch
+    while the full-resolution bands stay pyramid products.  The terminal
+    position is already enforced by `resolve_chain` (geometry-changing taps
+    are terminal); this adds the cross-launch requirement that such a tap
+    exists at all.  Returns the carry band's index in the chain's output
+    tuple (always the last band)."""
+    resolved = resolve_chain(stages)
+    op, mode, halo, stride, up, n_in, n_out, tap = resolved[-1]
+    if mode != "tap" or stride == (1, 1):
+        raise ValueError(
+            f"next_base contract: the final stage ({op!r}, mode {mode!r}, "
+            f"stride {stride}) is not a strided terminal tap — a pyramid "
+            "link must end with e.g. pyr_down_stage(tap=...) so its last "
+            "output band is the next launch's base")
+    return n_out - 1
+
+
+# ---------------------------------------------------------------------------
+# Spec round-tripping: (static spec, flat weights) <-> Stage tuple, so the
+# executors' jit caches key on hashable specs while taps stay traced.
+# ---------------------------------------------------------------------------
+
+def spec_of(stages) -> tuple:
+    return tuple((s.op, s.static, s.tap) for s in stages)
+
+
+def flat_weights(stages) -> tuple:
+    return tuple(w for s in stages for w in s.weights)
+
+
+def respec(spec, weights) -> tuple[Stage, ...]:
+    """Rebuild Stage objects from the static spec + flat weight list."""
+    out, wi = [], 0
+    for op, static, tap in spec:
+        nw = _N_WEIGHTS[op]
+        out.append(Stage(op, static, tuple(weights[wi:wi + nw]), tap))
+        wi += nw
+    return tuple(out)

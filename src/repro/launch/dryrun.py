@@ -21,7 +21,7 @@ from repro.configs.registry import cell_status
 from repro.models import lm
 from repro.models.config import SHAPES
 from repro.roofline.hlo_parse import parse_collectives, top_collectives
-from repro.serve import engine
+from repro.serve import cv_engine as engine
 from repro.sharding import rules
 from repro.train import step as step_mod
 from repro.launch.mesh import make_production_mesh

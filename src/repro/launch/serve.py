@@ -22,7 +22,7 @@ def main():
     from repro.configs import extra_inputs, get_config, reduced_config
     from repro.launch.mesh import make_host_mesh
     from repro.models import lm
-    from repro.serve.engine import generate
+    from repro.serve.cv_engine import generate
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     mesh = make_host_mesh()

@@ -1,2 +1,3 @@
-from . import engine  # noqa: F401
+# the LM serving steps (prefill/decode/generate) live in cv_engine too —
+# one serving front end (the old serve/engine.py was folded in)
 from . import cv_engine  # noqa: F401

@@ -10,7 +10,7 @@ must degrade, not take down `pipeline.predict` with a raw traceback.
     canonical shapes cover all traffic and the measured-mode plan table
     (`autotune`) hits instead of re-keying per odd shape.
   * **Degradation ladder** — every batch executes under
-    ``streaming -> window -> chain_ref``: a rung that raises (lowering
+    ``streaming -> tiled2d -> window -> chain_ref``: a rung that raises (lowering
     error, injected fault, plan-cache damage) is retried with backoff,
     then the engine degrades to the next rung and records a structured
     `core.faultinject` degradation event.  The `chain_ref` floor is pure
@@ -47,10 +47,11 @@ import numpy as np
 from repro.core import faultinject
 from repro.core import autotune
 from repro.cv import features, pipeline
+from repro.kernels import stencil
 from repro.train.fault import StragglerWatchdog
 
 DEFAULT_BUCKETS = ((32, 32), (64, 64), (128, 128), (256, 256))
-DEFAULT_LADDER = ("streaming", "window", "ref")
+DEFAULT_LADDER = stencil.DEGRADATION_LADDER   # streaming -> tiled2d -> window -> ref
 
 
 @dataclass
@@ -97,7 +98,7 @@ class CvEngine:
         if not ladder:
             raise ValueError("ladder must have at least one rung")
         for rung in ladder:
-            if rung not in ("streaming", "window", "ref"):
+            if rung not in stencil.MODES:
                 raise ValueError(f"unknown ladder rung {rung!r}")
         self.model = model
         self.buckets = tuple(sorted(tuple(b) for b in buckets))
@@ -335,6 +336,99 @@ class CvEngine:
         if self.model is None:
             raise ValueError("classify needs a trained BowSvmModel")
         return self.submit(imgs)
+
+
+# ---------------------------------------------------------------------------
+# LM serving steps (folded from the old serve/engine.py so there is ONE
+# serving front end): prefill + greedy decode against sharded KV/state
+# caches.  serve_step (the dry-run target for decode_* / long_* shapes)
+# consumes and produces the cache (donated); the KV time axis is sharded
+# over "model" (split-K decode — the partial-softmax collectives are
+# inserted by SPMD).  The LM model/sharding imports stay lazy: the CV
+# batch engine above must import (and chaos-test) without them.
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg, mesh):
+    from repro.models import lm
+    from repro.sharding import rules
+
+    hint = rules.make_hint(mesh, cfg)
+
+    def prefill_step(params, batch):
+        logits, cache = lm.prefill(params, cfg, batch, hint=hint)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg, mesh, *, greedy: bool = True):
+    from repro.models import lm
+    from repro.sharding import rules
+
+    hint = rules.make_hint(mesh, cfg)
+
+    def serve_step(params, cache, tokens):
+        """tokens (B, 1) int32 -> (next_token (B,), new cache)."""
+        logits, new_cache = lm.decode_step(params, cfg, tokens, cache, hint=hint)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return serve_step
+
+
+def generate(params, cfg, prompt_tokens, *, steps: int, mesh, cache_len: int | None = None,
+             extras: dict | None = None):
+    """Simple greedy generation loop (prefill + repeated decode) for the
+    examples; runs on whatever mesh is active."""
+    from repro.models import lm
+
+    B, S = prompt_tokens.shape
+    cache_len = cache_len or (S + steps)
+    batch = {"tokens": prompt_tokens, **(extras or {})}
+    prefill_step = make_prefill_step(cfg, mesh)
+    decode = jax.jit(make_decode_step(cfg, mesh), donate_argnums=(1,))
+    tok, pcache = jax.jit(prefill_step)(params, batch)
+    # re-home the prefill cache into fixed-size decode buffers
+    cache = lm.init_cache(cfg, B, cache_len,
+                          ctx_len=pcache.get("ctx", jnp.zeros((B, 0, 1))).shape[1] if "ctx" in pcache else None)
+    cache = _adopt_prefill(cache, pcache, cfg)
+    out = [tok]
+    for _ in range(steps - 1):
+        tok, cache = decode(params, cache, out[-1][:, None])
+        out.append(tok)
+    return jnp.stack(out, axis=1)
+
+
+def _adopt_prefill(cache, pcache, cfg):
+    """Copy prefill KV (length S) into decode buffers (length cache_len)."""
+    cache = dict(cache)
+    cache["pos"] = pcache["pos"]
+    new_groups = []
+    for (kind, _), buf, pre in zip(cfg.blocks, cache["groups"], pcache["groups"]):
+        if kind in ("attn", "moe", "enc", "dec", "mla", "mla_moe"):
+            def put(b, p):
+                if b.ndim >= 3 and p.ndim == b.ndim and p.shape[2] <= b.shape[2]:
+                    return jax.lax.dynamic_update_slice(b, p.astype(b.dtype), (0,) * b.ndim)
+                return p.astype(b.dtype) if p.shape == b.shape else b
+            merged = jax.tree.map(put, buf, pre)
+        else:
+            merged = jax.tree.map(lambda b, p: p.astype(b.dtype) if p.shape == b.shape else b, buf, pre)
+        new_groups.append(merged)
+    cache["groups"] = new_groups
+    if "ctx" in pcache:
+        cache["ctx"] = pcache["ctx"]
+    if cfg.shared_attn_every:
+        merged_shared = []
+        for buf, pre in zip(cache["shared"], pcache["shared"]):
+            def put(b, p):
+                if p.ndim == b.ndim and p.shape[1] <= b.shape[1]:
+                    return jax.lax.dynamic_update_slice(b, p.astype(b.dtype), (0,) * b.ndim)
+                return b
+            merged_shared.append(jax.tree.map(put, buf, pre))
+        cache["shared"] = merged_shared
+    return cache
 
 
 # ---------------------------------------------------------------------------

@@ -6,7 +6,7 @@ import pytest
 
 from repro.configs import ARCHS, extra_inputs, reduced_config
 from repro.models import lm
-from repro.serve import engine
+from repro.serve import cv_engine as engine
 
 B, S = 2, 24
 
