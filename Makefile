@@ -2,7 +2,7 @@ PYTHONPATH := src
 export PYTHONPATH
 
 .PHONY: test lint bench-quick bench pipeline-bench perf-gate autotune-cache \
-        serve-smoke serve-bench chaos-test
+        serve-smoke serve-bench serve-bench-sharded chaos-test
 
 # MODE=streaming|window|both selects the fused-chain execution plan(s)
 # the pipeline benches time (default both; see kernels/stencil.py modes)
@@ -46,3 +46,6 @@ chaos-test:      ## fault suite under injection (the chaos CI cell)
 
 serve-bench:     ## serving throughput benchmark (appends to BENCH_results.json)
 	python -m benchmarks.serve_bench
+
+serve-bench-sharded:  ## batch-1024 multi-device fan-out rows (child per device count)
+	python -m benchmarks.serve_bench --sharded --quick

@@ -27,6 +27,10 @@ Flags:
                       M (the Makefile's MODE passthrough: a deliberate
                       window-only pass is gated against window-only
                       history, never against a both-plan row).
+  --require-serve-sharded  fail unless serve rows with batch=1024 and
+                      case `serve_sharded_d<N>` exist — the chaos-multi
+                      CI cell runs `serve_bench --sharded` first, and a
+                      silently-skipped bench must not pass the gate.
   --require-history   main-branch runs: fail LOUDLY when the previous CI
                       run's history was not actually merged (the
                       `_ci_history` provenance marker merge_history.py
@@ -70,7 +74,8 @@ def _gated(data: dict, bench: str, mode: str | None):
 
 
 def check(data: dict, *, mode: str | None = None,
-          require_history: bool = False) -> list[str]:
+          require_history: bool = False,
+          require_serve_sharded: bool = False) -> list[str]:
     fails = []
     n_gated = 0
     for row in _gated(data, "pipeline", mode):
@@ -146,6 +151,23 @@ def check(data: dict, *, mode: str | None = None,
             "the gate checked nothing (re-run the bench with MODE="
             f"{mode}, or gate with the MODE the bench recorded)")
 
+    # the chaos-multi cell must actually have produced the sharded
+    # batch-1024 serve rows (a silently-skipped bench would otherwise
+    # leave the multi-device path ungated forever)
+    if require_serve_sharded:
+        sharded = [r for r in data.get("serve", [])
+                   if r.get("batch") == 1024
+                   and str(r.get("case", "")).startswith("serve_sharded_d")]
+        if not sharded:
+            fails.append(
+                "--require-serve-sharded: no serve row with batch=1024 and "
+                "case serve_sharded_d<N> in BENCH_results.json — "
+                "`python -m benchmarks.serve_bench --sharded` never "
+                "recorded its fan-out rows")
+        else:
+            devs = sorted(r.get("devices") for r in sharded)
+            print(f"  serve_sharded rows present at devices={devs}")
+
     if require_history:
         if "_ci_history" not in data:
             fails.append(
@@ -177,6 +199,10 @@ def main(argv=None) -> int:
     ap.add_argument("--require-history", action="store_true",
                     help="fail when no previous history entry was found "
                          "(main-branch CI runs)")
+    ap.add_argument("--require-serve-sharded", action="store_true",
+                    help="fail unless the sharded batch-1024 serve rows "
+                         "exist (the chaos-multi CI cell runs "
+                         "serve_bench --sharded first)")
     args = ap.parse_args(argv)
     try:
         with open(RESULTS_PATH) as f:
@@ -185,7 +211,8 @@ def main(argv=None) -> int:
         print(f"perf_gate: cannot read {RESULTS_PATH}: {e}")
         return 1
     fails = check(data, mode=args.mode,
-                  require_history=args.require_history)
+                  require_history=args.require_history,
+                  require_serve_sharded=args.require_serve_sharded)
     if fails:
         print("perf_gate: FAIL")
         for f_ in fails:

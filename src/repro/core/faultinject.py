@@ -25,6 +25,13 @@ Fault taxonomy (``FAULT_KINDS``):
   measure_timeout measure_chain raises MeasureTimeout before timing
   nan_input       float input frames get NaN/Inf poisoned at seeded spots
   bucket_miss     the serving engine's bucket lookup pretends not to fit
+  device_loss     a data-axis device drops out mid-serve: the dispatch that
+                  drew the firing marks the device lost (sticky — every
+                  later dispatch to it fails without consuming a firing)
+  shard_oom       one shard's rung execution runs out of memory — a
+                  plan-level failure the degradation ladder absorbs
+  collective_timeout  the collective shard_map fan-out stalls past its
+                  deadline; every shard re-runs on the isolated path
 
 Spec grammar (``REPRO_FAULT_SPEC``)::
 
@@ -39,8 +46,10 @@ first N eligible calls), ``seed`` (stream seed, default 0).
 from __future__ import annotations
 
 import collections
+import contextvars
 import os
 import random
+import threading
 import time
 from dataclasses import dataclass, field
 
@@ -52,6 +61,9 @@ FAULT_KINDS = (
     "measure_timeout",
     "nan_input",
     "bucket_miss",
+    "device_loss",
+    "shard_oom",
+    "collective_timeout",
 )
 
 ENV_VAR = "REPRO_FAULT_SPEC"
@@ -258,6 +270,16 @@ class DegradationEvent:
 
 _DEG_LOG: collections.deque = collections.deque(maxlen=4096)
 _DEG_COUNTS: collections.Counter = collections.Counter()
+# One lock guards the ring log + counters: the sharded dispatcher (and any
+# threaded caller) may record degradations concurrently, and a deque
+# append racing a snapshot iteration is undefined.  The lock is module-
+# private on purpose — every mutation/read path below takes it.
+_DEG_LOCK = threading.Lock()
+# Scoped collectors (see `collect_events`): context-local, so concurrent
+# shard writers each see only the events recorded inside their own scope
+# — per-request `events` can never interleave across shards.
+_COLLECTORS: contextvars.ContextVar[tuple] = contextvars.ContextVar(
+    "repro_deg_collectors", default=())
 
 
 def record_degradation(*, stage: str, from_plan: str, to_plan: str,
@@ -267,19 +289,48 @@ def record_degradation(*, stage: str, from_plan: str, to_plan: str,
                           to_plan=str(to_plan), reason=str(reason)[:300],
                           detail=str(detail)[:300], injected=injected,
                           time_s=time.time())
-    _DEG_LOG.append(ev)
-    _DEG_COUNTS[(ev.stage, ev.from_plan, ev.to_plan)] += 1
+    with _DEG_LOCK:
+        _DEG_LOG.append(ev)
+        _DEG_COUNTS[(ev.stage, ev.from_plan, ev.to_plan)] += 1
+    for sink in _COLLECTORS.get():
+        sink.append(ev)
     return ev
 
 
 def degradation_log() -> list[DegradationEvent]:
-    return list(_DEG_LOG)
+    with _DEG_LOCK:
+        return list(_DEG_LOG)
 
 
 def degradation_counts() -> dict[tuple[str, str, str], int]:
-    return dict(_DEG_COUNTS)
+    with _DEG_LOCK:
+        return dict(_DEG_COUNTS)
 
 
 def clear_degradation_log() -> None:
-    _DEG_LOG.clear()
-    _DEG_COUNTS.clear()
+    with _DEG_LOCK:
+        _DEG_LOG.clear()
+        _DEG_COUNTS.clear()
+
+
+class collect_events:
+    """Scoped snapshot view of the degradation log.
+
+    ``with faultinject.collect_events() as evs: ...`` collects exactly the
+    events recorded *inside the with-block, in this context* (the global
+    ring log still receives everything).  Because the collector stack is a
+    `contextvars.ContextVar`, a scope opened in one thread is invisible to
+    every other thread: the sharded dispatcher wraps each shard's ladder
+    walk in its own scope, so per-shard (and therefore per-request)
+    `events` lists cannot interleave even when shards degrade
+    concurrently.  Scopes nest — an inner scope's events also land in the
+    enclosing scope."""
+
+    def __enter__(self) -> list:
+        self.events: list[DegradationEvent] = []
+        self._token = _COLLECTORS.set(_COLLECTORS.get() + (self.events,))
+        return self.events
+
+    def __exit__(self, *exc):
+        _COLLECTORS.reset(self._token)
+        return False

@@ -93,7 +93,7 @@ from .ir import (Stage, _GATHER_OPS, _N_WEIGHTS, _STRIDES,  # noqa: F401
                  sobel_stage, threshold_stage, validate_next_base,
                  warp_affine_stage)
 from .ladder import (DEGRADATION_LADDER, MODES, default_chain_mode,  # noqa: F401
-                     default_ladder, set_default_chain_mode,
+                     default_ladder, resolve_rungs, set_default_chain_mode,
                      set_default_ladder)
 from .plan import (chain_accumulated_halo, chain_halo, chain_iface,  # noqa: F401
                    chain_stream_plan, stage_out_hw)

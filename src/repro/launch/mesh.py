@@ -34,3 +34,16 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     data = n // model
     return make_mesh((data, model), ("data", "model"))
+
+
+def make_cv_mesh(data: int | None = None):
+    """Data-only mesh for the CV serving fan-out (`serve/shard_dispatch`).
+
+    The CV batch path is pure data parallelism — every image is
+    independent, so the mesh has a single "data" axis over the host's
+    devices (capped at `data` when given).  Single-device hosts get a
+    1-device mesh: `CvEngine` then serves exactly as before (the
+    dispatcher only engages past one data-axis device)."""
+    n = len(jax.devices())
+    data = n if data is None else max(1, min(int(data), n))
+    return make_mesh((data,), ("data",))

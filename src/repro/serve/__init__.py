@@ -1,3 +1,3 @@
 # the LM serving steps (prefill/decode/generate) live in cv_engine too —
 # one serving front end (the old serve/engine.py was folded in)
-from . import cv_engine  # noqa: F401
+from . import cv_engine, health, shard_dispatch  # noqa: F401

@@ -29,6 +29,15 @@ must degrade, not take down `pipeline.predict` with a raw traceback.
     bucket under a deadline and a `train.fault.StragglerWatchdog`;
     a measurement timeout records an event and the engine serves via
     the halo heuristic instead.
+  * **Sharded fan-out** — given a multi-device CV mesh
+    (``CvEngine(mesh=make_cv_mesh())``), batches route through
+    `serve.shard_dispatch.ShardDispatcher`: the batch fans out over the
+    "data" axis, each shard is an independent fault domain with its own
+    ladder walk, failed/lost shards re-dispatch to devices the
+    device-health ledger still trusts, and a circuit breaker
+    short-circuits known-bad (signature, bucket, rung) combinations.
+    Responses carry the serving shard/device; single-device hosts (or
+    ``mesh=None``) serve exactly as before.
 
 Faults are injected (deterministically) via ``REPRO_FAULT_SPEC`` /
 `core.faultinject` — the chaos CI cell runs this engine's smoke workload
@@ -46,8 +55,9 @@ import numpy as np
 
 from repro.core import faultinject
 from repro.core import autotune
-from repro.cv import features, pipeline
+from repro.cv import bow, features, pipeline, svm
 from repro.kernels import stencil
+from repro.serve.shard_dispatch import ShardDispatcher
 from repro.train.fault import StragglerWatchdog
 
 DEFAULT_BUCKETS = ((32, 32), (64, 64), (128, 128), (256, 256))
@@ -73,6 +83,8 @@ class Response:
     retries: int = 0
     degraded: bool = False
     deadline_missed: bool = False
+    shard: int | None = None         # data-axis shard that served this request
+    device: str | None = None        # device_key of the serving device
     error: str | None = None
     events: list = field(default_factory=list)
     latency_s: float = 0.0
@@ -90,7 +102,8 @@ class CvEngine:
                  max_retries: int = 1, backoff_s: float = 0.01,
                  bad_input: str = "sanitize", max_kp: int = 32,
                  n_octaves: int = 1, preprocess: bool = False,
-                 capture_frames: bool = False, watchdog=None):
+                 capture_frames: bool = False, watchdog=None,
+                 mesh=None, dispatcher: ShardDispatcher | None = None):
         if bad_input not in ("sanitize", "reject"):
             raise ValueError(f"bad_input must be 'sanitize' or 'reject', "
                              f"got {bad_input!r}")
@@ -113,9 +126,23 @@ class CvEngine:
         self.capture_frames = bool(capture_frames)
         self.watchdog = watchdog if watchdog is not None else \
             StragglerWatchdog(threshold=4.0, warmup=2)
+        if dispatcher is not None and mesh is not None:
+            raise ValueError("pass mesh= OR dispatcher=, not both")
+        if dispatcher is None and mesh is not None:
+            dispatcher = ShardDispatcher(mesh, ladder=ladder)
+        self.dispatcher = dispatcher
         self.captured: list = []     # (bucket, canonical batch) when capturing
         self.stats = {"served": 0, "errors": 0, "degraded_batches": 0,
-                      "retries": 0, "deadline_missed": 0, "sanitized": 0}
+                      "retries": 0, "deadline_missed": 0, "sanitized": 0,
+                      "sharded_batches": 0, "shard_failures": 0}
+
+    @property
+    def signature(self) -> str:
+        """Workload identity half of the circuit-breaker key: one string
+        per (task, pipeline knobs) — bucket and rung complete the key."""
+        task = "classify" if self.model is not None else "extract"
+        return (f"cv:{task}:kp{self.max_kp}:oct{self.n_octaves}"
+                f":pre{int(self.preprocess)}")
 
     # -- admission -----------------------------------------------------------
 
@@ -182,27 +209,39 @@ class CvEngine:
 
     # -- ladder execution ----------------------------------------------------
 
-    def _run_batch(self, batch: np.ndarray, rung: str):
-        """One canonical batch through the pipeline at one explicit rung."""
-        x = jnp.asarray(batch)
-        if self.model is not None:
-            pred = pipeline.predict(self.model, x, max_kp=self.max_kp,
-                                    preprocess=self.preprocess,
-                                    n_octaves=self.n_octaves, mode=rung,
-                                    validate=False)
-            return {"pred": np.asarray(jax.block_until_ready(pred))}
+    def _batch_fn(self, x, rung: str):
+        """Traceable per-rung batch computation: (B, H, W[, C]) jax array
+        -> dict of batch-leading jax arrays.  No host sync, no timing —
+        it must trace under `shard_map`, so both the local ladder
+        (`_run_batch`) and the sharded dispatcher run through it; the
+        classify composition matches `pipeline.predict` numerically."""
         feats = pipeline.extract_features(x, max_kp=self.max_kp,
                                           preprocess=self.preprocess,
                                           n_octaves=self.n_octaves,
                                           mode=rung, validate=False)
-        jax.block_until_ready(feats["desc"])
-        return {"desc": np.asarray(feats["desc"]),
-                "valid": np.asarray(feats["valid"])}
+        if self.model is not None:
+            hists = bow.batch_histograms(feats["desc"], feats["valid"],
+                                         self.model.centroids)
+            return {"pred": svm.svm_predict(self.model.svm, hists)}
+        return {"desc": feats["desc"], "valid": feats["valid"]}
 
-    def _run_ladder(self, batch: np.ndarray):
+    def _run_batch(self, batch: np.ndarray, rung: str):
+        """One canonical batch through the pipeline at one explicit rung."""
+        out = self._batch_fn(jnp.asarray(batch), rung)
+        return {k: np.asarray(jax.block_until_ready(v))
+                for k, v in out.items()}
+
+    def _run_ladder(self, batch: np.ndarray, deadlines=()):
         """Ladder + bounded retry; returns (result, plan, retries, events)
-        or raises only if the FINAL rung fails every attempt."""
+        or raises only if the FINAL rung fails every attempt.
+
+        `deadlines` carries the batch's absolute request deadlines: a
+        retry whose backoff sleep would overrun the tightest one is
+        abandoned (deadline_missed, NOT a retry) and the ladder degrades
+        immediately — sleeping through a deadline to honor the retry
+        budget would answer every request in the batch late."""
         events, retries = [], 0
+        nearest = min((d for d in deadlines if d is not None), default=None)
         for i, rung in enumerate(self.ladder):
             last_rung = i == len(self.ladder) - 1
             for attempt in range(self.max_retries + 1):
@@ -213,6 +252,21 @@ class CvEngine:
                 except Exception as e:
                     injected = isinstance(e, faultinject.InjectedFault)
                     if attempt < self.max_retries:
+                        sleep_s = self.backoff_s * (2 ** attempt)
+                        if (nearest is not None
+                                and time.monotonic() + sleep_s > nearest):
+                            self.stats["deadline_missed"] += 1
+                            events.append(faultinject.record_degradation(
+                                stage="serve", from_plan=rung,
+                                to_plan=rung if last_rung
+                                else self.ladder[i + 1],
+                                reason=f"retry abandoned: {sleep_s:.3f}s "
+                                       f"backoff would sleep past the batch "
+                                       f"deadline ({type(e).__name__}: {e})",
+                                injected=injected))
+                            if last_rung:
+                                raise
+                            break    # degrade now instead of sleeping late
                         retries += 1
                         self.stats["retries"] += 1
                         events.append(faultinject.record_degradation(
@@ -220,7 +274,7 @@ class CvEngine:
                             reason=f"retry {attempt + 1}/{self.max_retries}: "
                                    f"{type(e).__name__}: {e}",
                             injected=injected))
-                        time.sleep(self.backoff_s * (2 ** attempt))
+                        time.sleep(sleep_s)
                         continue
                     if last_rung:
                         raise
@@ -242,10 +296,22 @@ class CvEngine:
         gen = np.random.default_rng(seed)
         img = jnp.asarray(gen.random((h, w), dtype=np.float32))
         chain = features.octave_chain(with_next_base=False)
+        # route the warm measurement through the health ledger: it runs on
+        # the best healthy device and its outcome counts like a shard's
+        dev = None
+        if self.dispatcher is not None:
+            dev = self.dispatcher.health.pick()
+            if dev is not None and hasattr(dev, "platform"):
+                img = jax.device_put(img, dev)
+        t0 = time.monotonic()
         try:
-            return autotune.measure_chain(img, chain, n=n,
-                                          deadline_s=deadline_s,
-                                          watchdog=self.watchdog)
+            table = autotune.measure_chain(img, chain, n=n,
+                                           deadline_s=deadline_s,
+                                           watchdog=self.watchdog)
+            if dev is not None:
+                self.dispatcher.health.record_success(
+                    dev, time.monotonic() - t0)
+            return table
         except autotune.MeasureTimeout as e:
             faultinject.record_degradation(
                 stage="serve", from_plan="measured-plan",
@@ -253,6 +319,9 @@ class CvEngine:
                 reason=f"warm({h}x{w}) timed out: {e}",
                 injected=isinstance(e.__cause__, faultinject.InjectedFault)
                 or "injected" in str(e))
+            if dev is not None:
+                self.dispatcher.health.record_failure(
+                    dev, reason=f"warm({h}x{w}) timeout: {e}")
             return None
 
     def submit(self, workload) -> list[Response]:
@@ -279,7 +348,9 @@ class CvEngine:
             gkey = (bucket or canon.shape[:2], canon.shape, str(canon.dtype))
             groups.setdefault(gkey, []).append((idx, canon, admitted))
 
-        # batched ladder execution
+        # batched execution: sharded fan-out when a multi-device dispatcher
+        # is attached, local ladder otherwise
+        sharded = self.dispatcher is not None and self.dispatcher.n_shards > 1
         for (bucket, _, _), members in groups.items():
             for lo in range(0, len(members), self.max_batch):
                 part = members[lo:lo + self.max_batch]
@@ -288,8 +359,13 @@ class CvEngine:
                 if self.capture_frames:
                     self.captured.append((tuple(bucket), batch))
                 t0 = time.monotonic()
+                if sharded:
+                    self._submit_sharded(part, idxs, batch, bucket, reqs,
+                                         responses, t0)
+                    continue
                 try:
-                    result, plan, retries, events = self._run_ladder(batch)
+                    result, plan, retries, events = self._run_ladder(
+                        batch, [reqs[idx].deadline for idx in idxs])
                 except ValueError:
                     raise            # caller bug, not a serving fault
                 except Exception as e:
@@ -306,15 +382,7 @@ class CvEngine:
                     self.stats["degraded_batches"] += 1
                 for k, idx in enumerate(idxs):
                     admit_events = part[k][2]
-                    missed = (reqs[idx].deadline is not None
-                              and time.monotonic() > reqs[idx].deadline)
-                    if missed:
-                        self.stats["deadline_missed"] += 1
-                        faultinject.record_degradation(
-                            stage="serve", from_plan="on-time",
-                            to_plan="late",
-                            reason="deadline missed post-compute",
-                            detail=f"request {idx}")
+                    missed = self._deadline_missed(reqs[idx], idx)
                     responses[idx] = Response(
                         index=idx, ok=True,
                         desc=result["desc"][k] if "desc" in result else None,
@@ -328,6 +396,70 @@ class CvEngine:
                     self.stats["served"] += 1
         self.stats["last_submit_s"] = time.monotonic() - t_all
         return responses  # responses[i] is never None past this point
+
+    def _deadline_missed(self, req: Request, idx: int) -> bool:
+        missed = (req.deadline is not None
+                  and time.monotonic() > req.deadline)
+        if missed:
+            self.stats["deadline_missed"] += 1
+            faultinject.record_degradation(
+                stage="serve", from_plan="on-time", to_plan="late",
+                reason="deadline missed post-compute",
+                detail=f"request {idx}")
+        return missed
+
+    def _submit_sharded(self, part, idxs, batch, bucket, reqs,
+                        responses, t0) -> None:
+        """One group batch through the sharded dispatcher: per-shard fault
+        domains, per-request Responses carrying shard/device identity."""
+        try:
+            report = self.dispatcher.dispatch(
+                batch, self._batch_fn, signature=self.signature,
+                bucket=tuple(bucket), mode=self.ladder[0])
+        except ValueError:
+            raise                    # caller bug, not a serving fault
+        except Exception as e:       # dispatcher invariant broke: fail batch
+            for k, idx in enumerate(idxs):
+                responses[idx] = Response(
+                    index=idx, ok=False, bucket=tuple(bucket),
+                    error=f"dispatch_failed: {type(e).__name__}: {e}",
+                    events=list(part[k][2]))
+                self.stats["errors"] += 1
+            return
+        dt = time.monotonic() - t0
+        self.stats["sharded_batches"] += 1
+        degraded_batch = False
+        for k, idx in enumerate(idxs):
+            admit_events = list(part[k][2])
+            sres, row = report.result_of(k)
+            events = admit_events + list(report.events) + list(sres.events)
+            if not sres.ok:
+                self.stats["errors"] += 1
+                self.stats["shard_failures"] += 1
+                responses[idx] = Response(
+                    index=idx, ok=False, bucket=tuple(bucket),
+                    shard=sres.shard, device=sres.device,
+                    error=f"shard_failed: {sres.error}", events=events)
+                continue
+            degraded = (sres.plan != self.ladder[0] or sres.redispatches > 0
+                        or bool(events))
+            degraded_batch = degraded_batch or degraded
+            missed = self._deadline_missed(reqs[idx], idx)
+            responses[idx] = Response(
+                index=idx, ok=True,
+                desc=(sres.value["desc"][row]
+                      if "desc" in sres.value else None),
+                valid=(sres.value["valid"][row]
+                       if "valid" in sres.value else None),
+                pred=(int(sres.value["pred"][row])
+                      if "pred" in sres.value else None),
+                bucket=tuple(bucket), plan=sres.plan,
+                retries=sres.redispatches, degraded=degraded,
+                deadline_missed=missed, shard=sres.shard,
+                device=sres.device, events=events, latency_s=dt)
+            self.stats["served"] += 1
+        if degraded_batch:
+            self.stats["degraded_batches"] += 1
 
     def extract(self, imgs) -> list[Response]:
         return self.submit(imgs)
@@ -447,7 +579,12 @@ def _smoke(verbose: bool = True) -> int:
         else:
             work.append(gen.integers(0, 256, (h, w, 3), dtype=np.uint8))
     work.append(np.zeros((8, 8, 2), dtype=np.uint8))        # bad rank -> error
-    eng = CvEngine(buckets=((32, 32), (48, 48)), max_batch=8, max_kp=16)
+    mesh = None
+    if len(jax.devices()) > 1:       # multi-device host: shard the fan-out
+        from repro.launch.mesh import make_cv_mesh
+        mesh = make_cv_mesh()
+    eng = CvEngine(buckets=((32, 32), (48, 48)), max_batch=8, max_kp=16,
+                   mesh=mesh)
     faultinject.clear_degradation_log()
     res = eng.extract(work)
     n_ok = sum(r.ok for r in res)
@@ -463,6 +600,10 @@ def _smoke(verbose: bool = True) -> int:
               f"{len(faultinject.degradation_log())} degradation events; "
               f"faults={'on (' + ','.join(spec.specs) + ')' if spec else 'off'}")
         print(f"stats: {eng.stats}")
+        if eng.dispatcher is not None:
+            d = eng.dispatcher
+            print(f"shards: {d.stats}; lost={d.lost_devices()}; "
+                  f"quarantined={d.health.quarantined()}")
     return 0
 
 

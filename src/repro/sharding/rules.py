@@ -230,6 +230,47 @@ def make_hint(mesh: Mesh, cfg):
 
 
 # ---------------------------------------------------------------------------
+# CV batch rules (serve/shard_dispatch fan-out)
+# ---------------------------------------------------------------------------
+# The CV serving path shards exactly one thing: the image-batch axis of a
+# bucket batch (and of everything the pipeline derives from it — descriptor
+# stacks, validity masks, predictions all keep the batch axis leading).
+# Nothing else is sharded: the stencil launches are per-image, so there is
+# no model axis and no collective inside the computation.
+
+def cv_batch_spec(ndim: int) -> P:
+    """PartitionSpec for a batch-leading CV array: batch over "data"."""
+    if ndim < 1:
+        return P()
+    return P("data", *([None] * (ndim - 1)))
+
+
+def cv_batch_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    """NamedSharding placing a bucket batch over the mesh's data axis."""
+    return NamedSharding(mesh, cv_batch_spec(ndim))
+
+
+def cv_out_specs(out_shapes: Pytree) -> Pytree:
+    """Per-leaf batch-leading specs for a pipeline output tree (each leaf
+    keeps the batch axis leading: desc (B, K, 128), valid (B, K),
+    pred (B,))."""
+    return jax.tree.map(lambda s: cv_batch_spec(len(s.shape)), out_shapes)
+
+
+def cv_data_devices(mesh: Mesh) -> list:
+    """The devices along the mesh's "data" axis (other axes at index 0) —
+    the fault domains of the sharded CV dispatch, in shard order."""
+    if "data" not in mesh.axis_names:
+        raise ValueError(
+            f"cv_data_devices: mesh has no 'data' axis (axes: "
+            f"{mesh.axis_names}) — build one with launch.mesh.make_cv_mesh")
+    axis = mesh.axis_names.index("data")
+    idx = tuple(slice(None) if i == axis else 0
+                for i in range(mesh.devices.ndim))
+    return list(mesh.devices[idx])
+
+
+# ---------------------------------------------------------------------------
 # Batch / cache specs
 # ---------------------------------------------------------------------------
 

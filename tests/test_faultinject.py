@@ -118,3 +118,81 @@ def test_degradation_log_and_counts():
     assert fi.degradation_counts()[("fused_chain", "streaming", "window")] == 2
     fi.clear_degradation_log()
     assert fi.degradation_log() == [] and fi.degradation_counts() == {}
+
+
+# ---------------------------------------------------------------------------
+# PR-7 additions: sharding fault kinds, concurrent writers, scoped views
+# ---------------------------------------------------------------------------
+
+def test_sharding_fault_kinds_parse():
+    specs = fi.parse_spec("device_loss:count=2;shard_oom;"
+                          "collective_timeout:p=0.5,seed=3")
+    assert set(specs) == {"device_loss", "shard_oom", "collective_timeout"}
+    assert specs["device_loss"].count == 2
+    assert specs["collective_timeout"].p == 0.5
+    with fi.inject("shard_oom:count=1"):
+        with pytest.raises(fi.InjectedFault, match="shard_oom"):
+            fi.maybe_raise("shard_oom", site="shard0:streaming")
+        fi.maybe_raise("shard_oom", site="shard1:streaming")  # budget spent
+
+
+def test_degradation_log_concurrent_writers():
+    """The ring log + counters stay consistent under threaded recording
+    (the sharded dispatcher's writers): every event lands exactly once."""
+    import threading
+    n_threads, per = 8, 200
+
+    def writer(t):
+        for i in range(per):
+            fi.record_degradation(stage="serve", from_plan=f"t{t}",
+                                  to_plan="ref", reason=f"w{i}")
+
+    threads = [threading.Thread(target=writer, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    log = fi.degradation_log()
+    assert len(log) == n_threads * per
+    counts = fi.degradation_counts()
+    assert sum(counts.values()) == n_threads * per
+    for t in range(n_threads):
+        assert counts[("serve", f"t{t}", "ref")] == per
+
+
+def test_collect_events_scoped_and_nested():
+    with fi.collect_events() as outer:
+        fi.record_degradation(stage="serve", from_plan="a", to_plan="b",
+                              reason="outer")
+        with fi.collect_events() as inner:
+            fi.record_degradation(stage="serve", from_plan="c", to_plan="d",
+                                  reason="inner")
+        assert len(inner) == 1 and inner[0].from_plan == "c"
+    assert [ev.from_plan for ev in outer] == ["a", "c"]   # nesting adds up
+    fi.record_degradation(stage="serve", from_plan="e", to_plan="f",
+                          reason="outside")
+    assert len(outer) == 2                                # scope is closed
+    assert len(fi.degradation_log()) == 3                 # global sees all
+
+
+def test_collect_events_is_thread_isolated():
+    """A scope opened in one thread never sees another thread's events —
+    the property that keeps per-shard Response.events uninterleaved."""
+    import threading
+    seen_in_thread = []
+
+    def other():
+        with fi.collect_events() as mine:
+            fi.record_degradation(stage="serve", from_plan="thread",
+                                  to_plan="x", reason="t")
+            seen_in_thread.extend(mine)
+
+    with fi.collect_events() as main_scope:
+        th = threading.Thread(target=other)
+        th.start()
+        th.join()
+        fi.record_degradation(stage="serve", from_plan="main", to_plan="y",
+                              reason="m")
+    assert [ev.from_plan for ev in main_scope] == ["main"]
+    assert [ev.from_plan for ev in seen_in_thread] == ["thread"]

@@ -213,6 +213,37 @@ def test_deadlines_pre_and_post():
     assert eng.stats["deadline_missed"] == 2
 
 
+def test_retry_backoff_never_sleeps_past_deadline():
+    """Satellite: a retry whose backoff sleep would overrun the tightest
+    request deadline is abandoned (counted deadline_missed, NOT a retry)
+    and the ladder degrades immediately — the old behavior slept
+    `backoff * 2**attempt` regardless and answered the whole batch late."""
+    work = _gray_f32(2, seed=9)                  # 48x48: pallas rungs live
+    # backoff so large that ANY retry sleep overruns a near deadline; the
+    # generous retry budget must go entirely unused
+    eng = CvEngine(buckets=((48, 48),), max_kp=8, max_retries=3,
+                   backoff_s=120.0)
+    jax.clear_caches()
+    t0 = time.monotonic()
+    with faultinject.inject("lowering_error:count=1"):
+        res = eng.submit([Request(w, deadline=time.monotonic() + 1.0)
+                          for w in work])
+    assert time.monotonic() - t0 < 60.0      # never slept the 120s backoff
+    assert all(r.ok for r in res)            # served by the next rung
+    assert all(r.plan == "tiled2d" for r in res)
+    assert eng.stats["retries"] == 0         # abandoned, not retried
+    assert res[0].retries == 0
+    assert any("retry abandoned" in e.reason for e in res[0].events)
+    # same fault with no deadlines: the retry budget IS used (control)
+    jax.clear_caches()
+    eng2 = CvEngine(buckets=((32, 32),), max_kp=8, max_retries=3,
+                    backoff_s=0.0)
+    with faultinject.inject("lowering_error:count=1"):
+        res2 = eng2.submit(work)
+    assert all(r.ok and r.plan == "streaming" for r in res2)
+    assert eng2.stats["retries"] == 1
+
+
 # ---------------------------------------------------------------------------
 # structural chain_ref fallbacks under serving bucket shapes (satellite)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,414 @@
+"""Fault-isolated sharded serving (PR-7): shard fault domains, the
+device-health ledger, the circuit breaker, and deterministic chaos replay
+through the dispatcher.
+
+Most tests drive `ShardDispatcher` with *virtual* string devices — the
+ledger/breaker/re-dispatch state machines are identical, and everything
+computes on the single default device, so the suite stays cheap.  The
+real multi-device contract (8 virtual XLA devices, shard_map collective,
+bit-identical merge vs the single-device floor under injected device
+loss) runs once in a subprocess (XLA_FLAGS must be set before jax
+imports)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+from repro.core import faultinject
+from repro.cv import pipeline
+from repro.serve.cv_engine import CvEngine
+from repro.serve.health import CircuitBreaker, DeviceHealthLedger
+from repro.serve.shard_dispatch import ShardDispatcher
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    with faultinject.inject(None):
+        faultinject.clear_degradation_log()
+        yield
+    faultinject.clear_degradation_log()
+
+
+def _double(x, rung):
+    """Cheap stand-in batch fn: rung-independent, shape-preserving."""
+    return {"y": jnp.asarray(x) * 2}
+
+
+# ---------------------------------------------------------------------------
+# device-health ledger
+# ---------------------------------------------------------------------------
+
+def test_ledger_quarantine_and_probational_readmission():
+    led = DeviceHealthLedger(["a", "b"], quarantine_after=2, readmit_after=3)
+    led.record_failure("a", reason="rung failed")
+    assert led.stats("a").state == "healthy"        # 1 < quarantine_after
+    led.record_failure("a", reason="rung failed")
+    assert led.stats("a").state == "quarantined"
+    assert led.quarantined() == ["a"]
+    assert [d for d in led.healthy_devices()] == ["b"]
+    # cooldown: readmit_after dispatch rounds, then probation
+    led.tick(); led.tick()
+    assert led.stats("a").state == "quarantined"
+    led.tick()
+    assert led.stats("a").state == "probation"
+    assert "a" in led.healthy_devices()             # probation is dispatchable
+    led.record_success("a", 0.01)
+    assert led.stats("a").state == "healthy"
+    assert led.stats("a").consecutive_failures == 0
+
+
+def test_ledger_fatal_and_probation_failures_quarantine_immediately():
+    led = DeviceHealthLedger(["a", "b"], quarantine_after=5, readmit_after=1)
+    led.record_failure("a", reason="device lost", fatal=True)
+    assert led.stats("a").state == "quarantined"    # no K-failure grace
+    led.tick()
+    assert led.stats("a").state == "probation"
+    led.record_failure("a", reason="rung failed")   # one strike on probation
+    assert led.stats("a").state == "quarantined"
+    assert led.stats("a").quarantines == 2
+
+
+def test_ledger_pick_prefers_healthy_and_respects_exclude():
+    led = DeviceHealthLedger(["a", "b", "c"])
+    led.record_success("a", 0.5)
+    led.record_success("b", 0.01)
+    led.record_failure("c", reason="x")
+    # fewest consecutive failures first, then lowest mean latency
+    assert led.pick() == "b"
+    assert led.pick(exclude=["b"]) == "a"
+    assert led.pick(exclude=["a", "b", "c"]) is None
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+def test_breaker_opens_skips_then_probes_and_closes():
+    br = CircuitBreaker(open_after=2, probe_after=2)
+    key = ("sig", (32, 32), "streaming")
+    assert br.allow(key)
+    br.record_failure(key)
+    assert br.allow(key)                            # still closed at 1
+    br.record_failure(key)
+    assert br.state(key)["open"]
+    assert not br.allow(key)                        # skip 1
+    assert not br.allow(key)                        # skip 2
+    assert br.allow(key)                            # half-open probe
+    br.record_success(key)
+    assert not br.state(key)["open"]                # probe closed it
+    assert br.allow(key)
+
+
+def test_breaker_failed_probe_restarts_cooldown():
+    br = CircuitBreaker(open_after=1, probe_after=1)
+    key = ("s", None, "tiled2d")
+    br.record_failure(key)
+    assert not br.allow(key)
+    assert br.allow(key)                            # probe
+    br.record_failure(key)                          # probe failed
+    assert not br.allow(key)                        # cooldown restarted
+
+
+def test_breaker_filter_never_drops_final_rung():
+    br = CircuitBreaker(open_after=1, probe_after=99)
+    base = ("s", (32, 32))
+    for rung in ("streaming", "tiled2d", "window", "ref"):
+        br.record_failure(base + (rung,))           # open ALL of them
+    allowed, events = br.filter_rungs(
+        base, ("streaming", "tiled2d", "window", "ref"))
+    assert allowed == ("ref",)                      # floor always attemptable
+    assert len(events) == 3
+    assert all(ev.stage == "breaker" for ev in events)
+
+
+# ---------------------------------------------------------------------------
+# dispatcher: merge semantics + fault domains (virtual devices)
+# ---------------------------------------------------------------------------
+
+def test_dispatch_merges_in_shard_order_and_drops_padding():
+    disp = ShardDispatcher(devices=["v0", "v1", "v2"])
+    batch = np.arange(7 * 4 * 4, dtype=np.float32).reshape(7, 4, 4)
+    report = disp.dispatch(batch, _double, signature="t", bucket=(4, 4))
+    assert report.n_shards == 3 and report.batch == 7
+    assert all(s.ok for s in report.shards)
+    np.testing.assert_array_equal(report.merged()["y"], batch * 2)
+    # contiguous shard slices: request k lives in shard k // shard_size
+    assert [report.shard_of(k) for k in range(7)] == [0, 0, 0, 1, 1, 1, 2]
+    sres, row = report.result_of(4)
+    np.testing.assert_array_equal(sres.value["y"][row], batch[4] * 2)
+
+
+def test_shard_oom_degrades_one_shard_only():
+    disp = ShardDispatcher(devices=["v0", "v1"])
+    batch = np.ones((4, 4, 4), dtype=np.float32)
+    with faultinject.inject("shard_oom:count=1"):
+        report = disp.dispatch(batch, _double, signature="t", bucket=(4, 4))
+    s0, s1 = report.shards
+    assert s0.ok and s0.plan == "tiled2d"           # degraded past rung 1
+    assert any("shard_oom" in ev.reason for ev in s0.events)
+    assert s1.ok and s1.plan == "streaming" and not s1.events
+    np.testing.assert_array_equal(report.merged()["y"], batch * 2)
+
+
+def test_device_loss_redispatches_and_quarantines():
+    disp = ShardDispatcher(devices=["v0", "v1"])
+    batch = np.ones((4, 4, 4), dtype=np.float32)
+    with faultinject.inject("device_loss:count=1"):
+        report = disp.dispatch(batch, _double, signature="t", bucket=(4, 4))
+    s0, s1 = report.shards
+    assert s0.ok and s0.redispatches == 1 and s0.device == "v1"
+    assert any(ev.stage == "dispatch" and "device lost" in ev.reason
+               for ev in s0.events)
+    assert s1.ok and s1.redispatches == 0
+    assert disp.lost_devices() == ["v0"]
+    assert disp.health.quarantined() == ["v0"]      # fatal -> immediate
+    np.testing.assert_array_equal(report.merged()["y"], batch * 2)
+    # sticky: a later dispatch never hands v0 work while it is quarantined
+    report2 = disp.dispatch(batch, _double, signature="t", bucket=(4, 4))
+    assert all(s.device == "v1" for s in report2.shards)
+
+
+def test_every_device_lost_fails_shards_without_raising():
+    disp = ShardDispatcher(devices=["v0", "v1"])
+    batch = np.ones((4, 4, 4), dtype=np.float32)
+    with faultinject.inject("device_loss:count=2"):
+        report = disp.dispatch(batch, _double, signature="t", bucket=(4, 4))
+    assert not any(s.ok for s in report.shards)
+    assert all("device_lost_no_healthy" in s.error for s in report.shards)
+    assert sorted(disp.lost_devices()) == ["v0", "v1"]
+
+
+def test_ladder_exhaustion_redispatches_then_fails_shard():
+    def always_raise(x, rung):
+        raise RuntimeError("boom")
+    disp = ShardDispatcher(devices=["v0", "v1"], ladder=("window", "ref"),
+                           max_redispatch=1)
+    batch = np.ones((2, 4, 4), dtype=np.float32)
+    report = disp.dispatch(batch, always_raise, signature="t", bucket=(4, 4))
+    s0 = report.shards[0]
+    assert not s0.ok and "ladder_exhausted" in s0.error
+    assert s0.redispatches == 1                     # tried the second device
+    assert disp.health.stats("v0").failures >= 1
+    assert disp.health.stats("v1").failures >= 1
+
+
+def test_poisoned_shard_output_retries_down_ladder():
+    def poison_first_rung(x, rung):
+        out = jnp.asarray(x) * 2
+        if rung == "streaming":
+            out = out.at[0, 0, 0].set(jnp.nan)
+        return {"y": out}
+    disp = ShardDispatcher(devices=["v0"])
+    batch = np.ones((2, 4, 4), dtype=np.float32)
+    report = disp.dispatch(batch, poison_first_rung, signature="t",
+                           bucket=(4, 4))
+    s0 = report.shards[0]
+    assert s0.ok and s0.plan == "tiled2d"
+    assert any("non-finite" in ev.reason for ev in s0.events)
+    np.testing.assert_array_equal(s0.value["y"], batch * 2)
+
+
+def test_breaker_short_circuits_repeat_offender_rung():
+    calls = []
+    def fail_streaming(x, rung):
+        calls.append(rung)
+        if rung == "streaming":
+            raise RuntimeError("always bad here")
+        return {"y": jnp.asarray(x) * 2}
+    disp = ShardDispatcher(devices=["v0"], open_after=2, probe_after=99)
+    batch = np.ones((1, 4, 4), dtype=np.float32)
+    for _ in range(2):                              # opens the breaker
+        disp.dispatch(batch, fail_streaming, signature="t", bucket=(4, 4))
+    calls.clear()
+    report = disp.dispatch(batch, fail_streaming, signature="t",
+                           bucket=(4, 4))
+    assert calls == ["tiled2d"]                     # streaming never attempted
+    assert report.shards[0].ok and report.shards[0].plan == "tiled2d"
+    assert any(ev.stage == "breaker" and "skipped" in ev.reason
+               for ev in report.shards[0].events)
+
+
+# ---------------------------------------------------------------------------
+# collective path (real 1-device mesh: shard_map machinery without
+# multi-device process flags)
+# ---------------------------------------------------------------------------
+
+def test_collective_path_single_device_mesh():
+    from repro.launch.mesh import make_cv_mesh
+    disp = ShardDispatcher(make_cv_mesh(data=1))   # 1-device mesh even on
+    # multi-device hosts (the chaos-multi CI cell forces 8)
+    batch = np.arange(2 * 4 * 4, dtype=np.float32).reshape(2, 4, 4)
+    report = disp.dispatch(batch, _double, signature="t", bucket=(4, 4))
+    assert all(s.ok and s.collective for s in report.shards)
+    assert disp.stats["collective_batches"] == 1
+    np.testing.assert_array_equal(report.merged()["y"], batch * 2)
+
+
+def test_collective_timeout_falls_back_to_isolated():
+    from repro.launch.mesh import make_cv_mesh
+    disp = ShardDispatcher(make_cv_mesh(data=1))
+    batch = np.ones((2, 4, 4), dtype=np.float32)
+    with faultinject.inject("collective_timeout:count=1"):
+        report = disp.dispatch(batch, _double, signature="t", bucket=(4, 4))
+    assert all(s.ok and not s.collective for s in report.shards)
+    assert disp.stats["collective_batches"] == 0
+    assert disp.stats["isolated_shards"] == report.n_shards
+    assert any(ev.from_plan == "collective" and ev.to_plan == "isolated"
+               for ev in report.events)
+    np.testing.assert_array_equal(report.merged()["y"], batch * 2)
+
+
+# ---------------------------------------------------------------------------
+# engine integration (virtual devices; real pipeline)
+# ---------------------------------------------------------------------------
+
+def test_engine_routes_through_dispatcher_and_matches_local():
+    gen = np.random.default_rng(3)
+    work = [gen.random((30, 32), dtype=np.float32) for _ in range(4)]
+    eng = CvEngine(buckets=((32, 32),), max_kp=4, capture_frames=True,
+                   dispatcher=ShardDispatcher(devices=["v0", "v1"]))
+    res = eng.extract(work)
+    assert all(r.ok for r in res)
+    assert sorted({r.shard for r in res}) == [0, 1]
+    assert all(r.device in ("v0", "v1") for r in res)
+    assert eng.stats["sharded_batches"] == 1
+    (_, batch), = eng.captured
+    feats = pipeline.extract_features(jnp.asarray(batch), max_kp=4,
+                                      mode="streaming", validate=False)
+    for k, r in enumerate(res):
+        np.testing.assert_array_equal(r.desc, np.asarray(feats["desc"])[k])
+
+
+def test_chaos_replay_determinism_through_dispatcher():
+    """Satellite: same REPRO_FAULT_SPEC (incl. the new kinds) -> same
+    per-shard event sequence and bit-identical outputs, twice over.  Both
+    runs clear jit caches first: trace-time events (structural fallback,
+    lowering sites) fire per trace, so replay is defined from a cold
+    cache."""
+    spec = "device_loss:count=1;shard_oom:count=2"
+    gen = np.random.default_rng(11)
+    work = [gen.random((28, 32), dtype=np.float32) for _ in range(5)]
+
+    def one_run():
+        jax.clear_caches()
+        faultinject.clear_degradation_log()
+        with faultinject.inject(spec) as reg:
+            eng = CvEngine(buckets=((32, 32),), max_kp=4,
+                           dispatcher=ShardDispatcher(
+                               devices=["v0", "v1", "v2", "v3"]))
+            res = eng.extract(work)
+            fired = list(reg.fired)
+        assert all(r.ok for r in res)               # faults absorbed
+        events = [(ev.stage, ev.from_plan, ev.to_plan, ev.injected)
+                  for r in res for ev in r.events]
+        return ([(r.shard, r.plan, r.retries) for r in res],
+                events, fired, np.stack([r.desc for r in res]))
+
+    meta1, ev1, fired1, desc1 = one_run()
+    meta2, ev2, fired2, desc2 = one_run()
+    assert meta1 == meta2
+    assert ev1 == ev2
+    assert fired1 == fired2
+    np.testing.assert_array_equal(desc1, desc2)
+    assert any(kind == "device_loss" for kind, _ in fired1)
+    assert any(kind == "shard_oom" for kind, _ in fired1)
+    # 32x32 buckets sit under the octave chain's accumulated halo, so the
+    # fused path structurally floors to chain_ref: sharded output must be
+    # bit-identical to the single-device reference rung
+    jax.clear_caches()
+    eng_ref = CvEngine(buckets=((32, 32),), max_kp=4, capture_frames=True)
+    res_ref = eng_ref.extract(work)
+    np.testing.assert_array_equal(
+        desc1, np.stack([r.desc for r in res_ref]))
+
+
+# ---------------------------------------------------------------------------
+# the real multi-device contract (8 virtual XLA devices, subprocess)
+# ---------------------------------------------------------------------------
+
+def test_eight_device_mesh_device_loss_acceptance():
+    """ISSUE acceptance shape at test scale: an 8-device host mesh under
+    `device_loss:count=2` serves every request (lost shards re-dispatch),
+    outputs stay bit-identical to the single-device chain_ref floor, both
+    lost devices end up quarantined, and the same spec replays to the
+    same fired sequence.  (The batch-1024 rows run in
+    benchmarks/serve_bench.py and the chaos-multi CI cell.)"""
+    out = run_subprocess("""
+        import jax, numpy as np
+        from repro.core import faultinject
+        from repro.cv import pipeline
+        from repro.launch.mesh import make_cv_mesh
+        from repro.serve.cv_engine import CvEngine
+
+        assert len(jax.devices()) == 8
+        gen = np.random.default_rng(0)
+        work = [gen.random((32, 32), dtype=np.float32) for _ in range(48)]
+
+        def one_run():
+            jax.clear_caches()
+            faultinject.clear_degradation_log()
+            with faultinject.inject("device_loss:count=2") as reg:
+                eng = CvEngine(buckets=((32, 32),), max_batch=64, max_kp=4,
+                               mesh=make_cv_mesh())
+                res = eng.extract(work)
+                fired = list(reg.fired)
+            return eng, res, fired
+
+        eng, res, fired = one_run()
+        assert all(r.ok for r in res), [r.error for r in res if not r.ok]
+        assert all(r.shard is not None for r in res)
+        assert len({r.shard for r in res}) == 8
+        assert sum(1 for k, _ in fired if k == "device_loss") == 2
+        assert any(r.retries > 0 for r in res)          # re-dispatch happened
+        assert any("device lost" in ev.reason
+                   for r in res for ev in r.events)
+        q = eng.dispatcher.health.quarantined()
+        assert len(q) == 2, q                           # both lost devices
+        assert sorted(eng.dispatcher.lost_devices()) == sorted(q)
+
+        # bit-identical to the single-device reference floor
+        batch = np.stack(work)
+        ref = pipeline.extract_features(batch, max_kp=4, mode="ref",
+                                        validate=False)
+        got = np.stack([r.desc for r in res])
+        np.testing.assert_array_equal(got, np.asarray(ref["desc"]))
+
+        # deterministic replay of the same spec on a fresh engine
+        _, res2, fired2 = one_run()
+        assert fired2 == fired
+        np.testing.assert_array_equal(got, np.stack([r.desc for r in res2]))
+        ev1 = [(e.stage, e.from_plan, e.to_plan, e.injected)
+               for r in res for e in r.events]
+        ev2 = [(e.stage, e.from_plan, e.to_plan, e.injected)
+               for r in res2 for e in r.events]
+        assert ev1 == ev2
+        print("ACCEPT8 ok", len(res))
+    """, devices=8)
+    assert "ACCEPT8 ok 48" in out
+
+
+def test_eight_device_collective_fault_free_matches_reference():
+    """Fault-free 8-device serve takes the collective shard_map path and
+    still merges bit-identically to the single-device floor."""
+    out = run_subprocess("""
+        import jax, numpy as np
+        from repro.cv import pipeline
+        from repro.launch.mesh import make_cv_mesh
+        from repro.serve.cv_engine import CvEngine
+
+        gen = np.random.default_rng(5)
+        work = [gen.random((32, 32), dtype=np.float32) for _ in range(16)]
+        eng = CvEngine(buckets=((32, 32),), max_batch=64, max_kp=4,
+                       mesh=make_cv_mesh())
+        res = eng.extract(work)
+        assert all(r.ok for r in res)
+        assert eng.dispatcher.stats["collective_batches"] == 1
+        assert not eng.dispatcher.health.quarantined()
+        ref = pipeline.extract_features(np.stack(work), max_kp=4,
+                                        mode="ref", validate=False)
+        np.testing.assert_array_equal(np.stack([r.desc for r in res]),
+                                      np.asarray(ref["desc"]))
+        print("COLLECTIVE8 ok")
+    """, devices=8)
+    assert "COLLECTIVE8 ok" in out

@@ -45,7 +45,8 @@ STENCIL_PUBLIC_API = (
     "filter_stage", "fused_chain", "gaussian_stage", "grad_stage", "ir",
     "ladder", "launch_count", "plan", "pyr_down_stage", "pyr_up_stage",
     "remap_stage", "reset_launch_counter", "resize2_stage",
-    "resolve_chain", "sep_filter_stage", "set_default_chain_mode",
+    "resolve_chain", "resolve_rungs", "sep_filter_stage",
+    "set_default_chain_mode",
     "set_default_ladder", "sobel_stage", "stage_out_hw",
     "threshold_stage", "validate_next_base", "warp_affine_stage",
 )
