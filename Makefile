@@ -1,8 +1,8 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test lint bench-quick bench pipeline-bench perf-gate autotune-cache \
-        serve-smoke serve-bench serve-bench-sharded chaos-test
+.PHONY: test lint bench-quick bench pipeline-bench classify-bench perf-gate \
+        autotune-cache serve-smoke serve-bench serve-bench-sharded chaos-test
 
 # MODE=streaming|window|both selects the fused-chain execution plan(s)
 # the pipeline benches time (default both; see kernels/stencil.py modes)
@@ -23,6 +23,9 @@ bench:           ## full benchmark pass
 
 pipeline-bench:  ## fused-vs-staged acceptance benchmark only
 	python -m benchmarks.pipeline_bench --mode=$(MODE)
+
+classify-bench:  ## fused classifier tail (ClassifyPlan) vs per-image staged
+	python -m benchmarks.classify_bench
 
 # MODE is passed through so a `make bench-quick MODE=window` run is gated
 # against window-only history rows (like-for-like), not the both-plan ones

@@ -1,0 +1,200 @@
+"""Classifier-tail benchmark: the fused quantize -> histogram -> classify
+tail (`cv.classify.ClassifyPlan`) vs the staged per-image jnp tail.
+
+Staged baseline = the pre-plan structure (the paper's per-image classify
+loop, matching `pipeline_bench.staged_baseline`'s per-op/per-image
+convention): one histogram program per image (assignment indices
+materialized, scatter-add) plus one scoring program per image, every
+intermediate synced to the host.  Fused = the `ClassifyPlan` tail timed
+in BOTH rungs — "fused" (two Pallas launches per batch: the
+quantize->histogram kernel with in-VMEM running argmin + segment-sum,
+then the VMEM-resident-weights scoring kernel) and "ref" (the whole
+staged oracle as ONE jitted XLA program, the honest fusion floor on
+hosts where Pallas runs in interpret mode).  `fused_best_s`/`fused_mode`
+record the measured winner — the time auto-mode callers actually pay
+after `autotune.measure_classify` warms the plan table.
+
+Rows land in BENCH_results.json under "classify"; the CI perf gate
+(`perf_gate.py`) holds the SVM-head row to fused_speedup >= 1.2 and both
+rows to the history no-regress rule.  `modes_timed` is deliberately
+omitted: the classifier tail has its own ("fused", "ref") plan axis, so
+a stencil MODE=window pass gates these rows too.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autotune
+from repro.cv.classify import ClassifyPlan
+from repro.cv.gbdt import gbdt_train
+from repro.kernels import ref as kref
+from repro.kernels.stencil import count_pallas_calls
+
+from .common import flush_results, print_table, record_result, save_json, time_stats
+
+K_WORDS, D_DESC, N_CLASSES = 250, 128, 10
+
+
+def synthetic_tail(batch: int, n_desc: int, seed: int = 0):
+    """Deterministic descriptor batch + model artifacts (k=250 codebook)."""
+    rng = np.random.default_rng(seed)
+    descs = jnp.asarray(rng.normal(size=(batch, n_desc, D_DESC)).astype(np.float32))
+    valids = jnp.asarray(rng.random((batch, n_desc)) < 0.8)
+    cents = jnp.asarray(rng.normal(size=(K_WORDS, D_DESC)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(N_CLASSES, K_WORDS)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(N_CLASSES,)).astype(np.float32))
+    return descs, valids, cents, w, b
+
+
+def _hist1(cents):
+    """One-image staged histogram program (the pre-plan structure)."""
+
+    def hist(d, v):
+        idx, _ = kref.bow_assign_ref(d, cents)
+        h = jnp.zeros((K_WORDS,), jnp.float32).at[idx].add(v.astype(jnp.float32))
+        return h / jnp.maximum(jnp.sum(h), 1e-6)
+
+    return jax.jit(hist)
+
+
+def staged_svm_tail(descs, valids, cents, w, b):
+    """Per-image staged tail: B histogram programs + B scoring programs."""
+    hist = _hist1(cents)
+    score = jax.jit(lambda h: kref.svm_decision_ref(h[None], w, b)[0])
+    hs = [jax.block_until_ready(hist(descs[i], valids[i])) for i in range(descs.shape[0])]
+    return jnp.stack([jax.block_until_ready(score(h)) for h in hs])
+
+
+def staged_gbdt_tail(descs, valids, cents, model):
+    """Per-image staged tail for the GBDT head (per-image leaf walks)."""
+    hist = _hist1(cents)
+    score = jax.jit(
+        lambda h: kref.gbdt_scores_ref(h[None], model.feat, model.thr, model.leaf, model.base)[0]
+    )
+    hs = [jax.block_until_ready(hist(descs[i], valids[i])) for i in range(descs.shape[0])]
+    return jnp.stack([jax.block_until_ready(score(h)) for h in hs])
+
+
+def _time_plan_modes(plan, descs, valids, n: int):
+    """Time the whole tail per ClassifyPlan rung; fused_best_s/fused_mode
+    record the measured winner (what auto mode routes to)."""
+    times = {}
+    for m in ("fused", "ref"):
+        fn = jax.jit(lambda d, v, mm=m: plan.scores(plan.histograms(d, v, mode=mm), mode=mm))
+        times[m] = time_stats(fn, descs, valids, n=n)
+    best = min(times, key=lambda m: times[m]["best_s"])
+    fields = {
+        "fused_best_s": round(times[best]["best_s"], 4),
+        "fused_median_s": round(times[best]["median_s"], 4),
+        "fused_mode": best,
+    }
+    for m, t in times.items():
+        fields[f"fused_{m}_s"] = round(t["best_s"], 4)
+    return fields
+
+
+def run(*, quick: bool = False):
+    B, N = (24, 32) if quick else (64, 32)
+    n_rep = 2 if quick else 3
+    descs, valids, cents, w, b = synthetic_tail(B, N)
+    rows = []
+
+    # -- SVM head -----------------------------------------------------------
+    plan = ClassifyPlan(centroids=cents, n_classes=N_CLASSES, head="svm", w=w, b=b)
+
+    # structural acceptance: the fused tail is exactly TWO pallas_calls
+    # (quantize->histogram, score) and the ref rung launches none
+    n_fused = count_pallas_calls(
+        lambda d, v: plan.scores(plan.histograms(d, v, mode="fused"), mode="fused"),
+        descs,
+        valids,
+    )
+    assert n_fused == 2, f"fused classify tail lowered to {n_fused} pallas_calls"
+    n_ref = count_pallas_calls(
+        lambda d, v: plan.scores(plan.histograms(d, v, mode="ref"), mode="ref"),
+        descs,
+        valids,
+    )
+    assert n_ref == 0, f"ref classify tail lowered to {n_ref} pallas_calls"
+
+    # oracle contract: fused histograms and SVM scores are bit-identical
+    hf = plan.histograms(descs, valids, mode="fused")
+    hr = plan.histograms(descs, valids, mode="ref")
+    assert bool(jnp.all(hf == hr)), "fused histograms diverge from the oracle"
+    sf = plan.scores(hf, mode="fused")
+    sr = plan.scores(hf, mode="ref")
+    assert bool(jnp.all(sf == sr)), "fused SVM scores diverge from the oracle"
+
+    # warm + persist the measured winner (auto-mode callers route to it)
+    autotune.measure_classify(plan, descs, valids, n=n_rep)
+    fields = _time_plan_modes(plan, descs, valids, n_rep)
+    t_staged = time_stats(lambda: staged_svm_tail(descs, valids, cents, w, b), n=n_rep)
+    speedup = t_staged["best_s"] / fields["fused_best_s"]
+    row = {
+        "batch": f"{B}x{N}x{D_DESC}",
+        "size": K_WORDS,
+        "case": "svm_head",
+        "dtype": "f32",
+        "pallas_calls_fused": 2,
+        "staged_programs": 2 * B,
+        **fields,
+        "staged_best_s": round(t_staged["best_s"], 4),
+        "fused_speedup": round(speedup, 2),
+        "hist_bitexact": True,
+    }
+    rows.append(row)
+    record_result("classify", row)
+
+    # -- GBDT head ----------------------------------------------------------
+    rng = np.random.default_rng(7)
+    xs = jnp.asarray(rng.random((96, K_WORDS)).astype(np.float32))
+    ys = jnp.asarray(rng.integers(0, N_CLASSES, 96))
+    gm = gbdt_train(xs, ys, n_classes=N_CLASSES, n_trees=8 if quick else 16)
+    gplan = ClassifyPlan(centroids=cents, n_classes=N_CLASSES, head="gbdt", gbdt=gm)
+    lf = gplan.leaf_indices(hf, mode="fused")
+    lr = gplan.leaf_indices(hf, mode="ref")
+    assert bool(jnp.all(lf == lr)), "fused GBDT leaf indices diverge from the oracle"
+
+    autotune.measure_classify(gplan, descs, valids, n=n_rep)
+    gfields = _time_plan_modes(gplan, descs, valids, n_rep)
+    t_gstaged = time_stats(lambda: staged_gbdt_tail(descs, valids, cents, gm), n=n_rep)
+    gspeedup = t_gstaged["best_s"] / gfields["fused_best_s"]
+    grow = {
+        "batch": f"{B}x{N}x{D_DESC}",
+        "size": K_WORDS,
+        "case": "gbdt_head",
+        "dtype": "f32",
+        "n_trees": int(gm.feat.shape[0]),
+        "depth": int(gm.feat.shape[1]),
+        **gfields,
+        "staged_best_s": round(t_gstaged["best_s"], 4),
+        "fused_speedup": round(gspeedup, 2),
+        "leaves_bitexact": True,
+    }
+    rows.append(grow)
+    record_result("classify", grow)
+
+    print_table(
+        "Fused classifier tail (ClassifyPlan) vs per-image staged",
+        list(rows[0].keys()),
+        [[r.get(k, "") for k in rows[0].keys()] for r in rows],
+    )
+    save_json("classify", rows)
+    if speedup < 1.2:
+        print(f"WARNING: svm_head fused speedup {speedup:.2f}x below the 1.2x floor")
+    return rows
+
+
+if __name__ == "__main__":  # PYTHONPATH=src python -m benchmarks.classify_bench
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)
+    # one CI run = one history entry: fold these rows into the entry the
+    # pipeline bench just wrote for this SHA instead of appending a second
+    flush_results(amend_same_sha=True)

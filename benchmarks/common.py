@@ -127,7 +127,15 @@ def print_delta(data: dict) -> None:
         print("  (no matching rows in history)")
 
 
-def flush_results(path: str = RESULTS_PATH) -> str | None:
+def flush_results(path: str = RESULTS_PATH, *,
+                  amend_same_sha: bool = False) -> str | None:
+    """Merge recorded rows into BENCH_results.json + append one history
+    entry.  ``amend_same_sha=True`` folds this process's rows into the
+    LAST history entry when it carries the same git SHA instead of
+    appending a second entry — two bench processes in one CI run (e.g.
+    pipeline_bench then classify_bench) must look like ONE run to the
+    perf gate, or rule 3 would find the first process's entry at
+    hist[-2] and self-compare, masking real regressions."""
     if not _RESULTS:          # nothing measured: don't (re)write the file
         return None
     data = {}
@@ -140,11 +148,22 @@ def flush_results(path: str = RESULTS_PATH) -> str | None:
     data.update(_RESULTS)
     data["_meta"] = {"written_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
                      "backend": jax.default_backend()}
-    entry = {"sha": git_sha(),
-             "date": time.strftime("%Y-%m-%dT%H:%M:%S"),
-             "backend": jax.default_backend(),
-             "results": dict(_RESULTS)}
-    data["history"] = (data.get("history", []) + [entry])[-HISTORY_CAP:]
+    sha = git_sha()
+    hist = data.get("history", [])
+    if amend_same_sha and hist and hist[-1].get("sha") == sha \
+            and sha != "unknown":
+        merged = dict(hist[-1].get("results", {}))
+        merged.update(_RESULTS)
+        hist[-1] = {**hist[-1],
+                    "date": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                    "results": merged}
+        data["history"] = hist[-HISTORY_CAP:]
+    else:
+        entry = {"sha": sha,
+                 "date": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                 "backend": jax.default_backend(),
+                 "results": dict(_RESULTS)}
+        data["history"] = (hist + [entry])[-HISTORY_CAP:]
     with open(path, "w") as f:
         json.dump(data, f, indent=1, default=float)
     return path

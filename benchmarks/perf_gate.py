@@ -7,12 +7,16 @@ Rules:
      must keep ``fused_speedup >= 1.2`` vs the staged per-op path, and
      since the tiled2d plan landed (with it, the four-plan auto-mode
      routing the warp row's `fused_best_s` records) the warp chain must
-     too: ``fused_speedup >= 1.2`` on warp rows.
+     too: ``fused_speedup >= 1.2`` on warp rows.  The fused classifier
+     tail (ClassifyPlan: quantize -> histogram -> score) must likewise
+     keep ``fused_speedup >= 1.2`` vs the per-image staged tail on the
+     SVM-head classify row.
   2. Streaming beats window — the deep-ladder rows (octave, warp, and the
      multi-octave pyramid) must show the streaming plan no slower than the
      overlapping-window plan (the PR-4 claim; fires on CI --quick runs
      too, where rule 3 may have no same-shape history yet).
-  3. No regression — the octave/warp/pyramid fused-vs-staged speedups must
+  3. No regression — the octave/warp/pyramid/classify fused-vs-staged
+     speedups must
      not drop below the value recorded in the *previous* `history` entry
      that measured the same row (bench + shape + requested mode knob;
      --quick and full rows are never compared against each other).  A 15%
@@ -59,11 +63,16 @@ from .common import RESULTS_PATH, match_row, row_key
 
 MIN_PIPELINE_SPEEDUP = 1.2
 MIN_WARP_SPEEDUP = 1.2           # warp-chain floor (since tiled2d landed)
+MIN_CLASSIFY_SPEEDUP = 1.2       # fused classifier tail vs per-image staged
 REGRESSION_TOLERANCE = 0.85      # current >= 0.85 * previous
 STREAM_VS_WINDOW_TOLERANCE = 1.1  # streaming <= 1.1 * window on ladders
 
-# deep-ladder benches gated by rules 2 and 3 (fused-vs-staged no-regress)
-LADDER_BENCHES = ("octave", "warp", "pyramid")
+# deep-ladder benches gated by rules 2 and 3 (fused-vs-staged no-regress).
+# classify rows ride rule 3 too (they have fused_speedup but no
+# streaming/window split, so rule 2 skips them); their rows omit
+# modes_timed — the classifier tail's plan axis is ("fused","ref"), not
+# the stencil MODE knob, so a MODE-filtered gate still checks them.
+LADDER_BENCHES = ("octave", "warp", "pyramid", "classify")
 
 
 def _gated(data: dict, bench: str, mode: str | None):
@@ -90,6 +99,15 @@ def check(data: dict, *, mode: str | None = None,
         if sp is not None and sp < MIN_WARP_SPEEDUP:
             fails.append(f"warp {row.get('image')}: fused_speedup {sp} "
                          f"< {MIN_WARP_SPEEDUP} floor (auto-mode winner "
+                         f"{row.get('fused_mode')!r})")
+
+    for row in _gated(data, "classify", mode):
+        if row.get("case") != "svm_head":
+            continue
+        sp = row.get("fused_speedup")
+        if sp is not None and sp < MIN_CLASSIFY_SPEEDUP:
+            fails.append(f"classify {row.get('batch')}: fused_speedup {sp} "
+                         f"< {MIN_CLASSIFY_SPEEDUP} floor (winner "
                          f"{row.get('fused_mode')!r})")
 
     for bench in LADDER_BENCHES:

@@ -22,11 +22,12 @@ def main():
                          "(make bench-quick MODE=...)")
     ap.add_argument("--only", default=None,
                     choices=[None, "filter2d", "erode", "bow", "lmul", "pipeline",
-                             "serve", "roofline"])
+                             "classify", "serve", "roofline"])
     args = ap.parse_args()
 
-    from benchmarks import (bow_svm_bench, erode_bench, filter2d_bench,
-                            lmul_bench, pipeline_bench, serve_bench)
+    from benchmarks import (bow_svm_bench, classify_bench, erode_bench,
+                            filter2d_bench, lmul_bench, pipeline_bench,
+                            serve_bench)
     from benchmarks.common import RESULTS_PATH, flush_results, print_delta
 
     if args.only in (None, "lmul"):
@@ -43,6 +44,8 @@ def main():
         pipeline_bench.run_small_kernel_routing(quick=args.quick)
     if args.only in (None, "bow"):
         bow_svm_bench.run(quick=args.quick)
+    if args.only in (None, "classify"):
+        classify_bench.run(quick=args.quick)
     if args.only in (None, "serve"):
         serve_bench.run(quick=args.quick)
     written = flush_results()

@@ -30,7 +30,7 @@ import sys
 
 import numpy as np
 
-from repro.cv import pipeline
+from repro.cv import PipelineConfig, pipeline
 from repro.data.synthetic import ImageStream
 from repro.serve.cv_engine import CvEngine
 
@@ -65,7 +65,8 @@ def run(quick: bool = False) -> list[dict]:
             outs = []
             for lo in range(0, len(work), 64):
                 batch = np.stack(work[lo : lo + 64])
-                feats = pipeline.extract_features(batch, max_kp=MAX_KP, mode="streaming")
+                feats = pipeline.extract_features(
+                    batch, PipelineConfig(max_kp=MAX_KP, mode="streaming"))
                 outs.append(np.asarray(feats["desc"]))
             return outs
 

@@ -322,6 +322,80 @@ def measure_chain(img, stages, *, vc: VectorConfig | None = None,
     return entry
 
 
+# -- classifier-tail autotune -------------------------------------------------
+#
+# `cv.classify.ClassifyPlan` (mode=None) consults the same measured plan
+# table as the stencil chains: entries are keyed by the plan's signature
+# (head + codebook/class shape) plus the descriptor-batch shape, so a
+# serving process that has measured its tail once routes every later
+# batch without re-timing.
+
+CLASSIFY_MODES = ("fused", "ref")
+
+
+def _classify_key(plan, shape, dtype, vc: VectorConfig | None = None) -> str:
+    return (f"{plan.signature}|{'x'.join(map(str, shape))}"
+            f"|{jnp.dtype(dtype).name}|{_vc_tag(vc if vc is not None else plan.vc)}"
+            f"|{jax.default_backend()}")
+
+
+def cached_classify_mode(plan, shape, dtype) -> str | None:
+    """The measured winner for this (classifier tail, batch shape, dtype,
+    vc, backend), or None."""
+    if not _DISK_CACHE_LOADED:
+        _load_disk_cache()
+    hit = _MODE_CACHE.get(_classify_key(plan, shape, dtype))
+    return hit["mode"] if hit else None
+
+
+def measure_classify(plan, descs, valids, *, n: int = 3,
+                     modes=CLASSIFY_MODES, persist: bool = True) -> dict:
+    """Time the classifier tail's {fused, ref} plans end-to-end
+    (histograms + scores) on a concrete descriptor batch and cache the
+    winner so `ClassifyPlan(mode=None)` routes automatically.  Same
+    contract as `measure_chain`: ValueError propagates (tail
+    misconfiguration must surface), a non-lowerable candidate is
+    skipped, the sealed entry lands in the shared plan table."""
+    import dataclasses
+
+    if faultinject.should_fire("measure_timeout", site="measure_classify"):
+        raise MeasureTimeout("injected measure_timeout before any candidate")
+    key = _classify_key(plan, descs.shape, descs.dtype)
+    # measure each rung bare: the plan's ladder would silently degrade a
+    # failing fused candidate into a mislabeled ref measurement
+    bare = dataclasses.replace(plan, ladder=None)
+    times, last_err = {}, None
+    for mode in modes:
+        def tail(m=mode):
+            h = bare.histograms(descs, valids, mode=m)
+            return bare.scores(h, mode=m)
+        try:
+            jax.block_until_ready(tail())                   # compile + warm
+        except ValueError:
+            raise
+        except Exception as e:
+            last_err = e
+            continue
+        best = float("inf")
+        for _ in range(n):
+            t0 = time.perf_counter()
+            jax.block_until_ready(tail())
+            best = min(best, time.perf_counter() - t0)
+        times[mode] = best
+    if not times:
+        raise RuntimeError(
+            "measure_classify: no candidate plan ran") from last_err
+    winner = min(times, key=times.get)
+    entry = {"mode": winner,
+             "times": {k: round(v, 6) for k, v in times.items()}}
+    _MODE_CACHE[key] = entry
+    if persist:
+        disk = load_plan_table()
+        disk[key] = entry
+        save_plan_table(disk)
+    return entry
+
+
 def measure_pyramid(img, chains, *, vc: VectorConfig | None = None,
                     n: int = 3, modes=CHAIN_MODES,
                     persist: bool = True) -> list[dict]:

@@ -1,1 +1,16 @@
-from . import bow, features, imgproc, pipeline, svm  # noqa: F401
+"""repro.cv — the OpenCV-algorithm reproduction stack.
+
+Stable public surface (pinned by tests/test_pipeline_config.py):
+`PipelineConfig` is the one knob bundle every entry point accepts,
+`ClassifyPlan` the classifier-tail plan seam, plus the submodules.
+"""
+from . import bow, classify, config, features, gbdt, imgproc, pipeline, svm
+from .classify import CLASSIFY_MODES, ClassifyPlan, build_plan
+from .config import PipelineConfig, resolve_config
+
+__all__ = [
+    "bow", "classify", "config", "features", "gbdt", "imgproc",
+    "pipeline", "svm",
+    "CLASSIFY_MODES", "ClassifyPlan", "build_plan",
+    "PipelineConfig", "resolve_config",
+]

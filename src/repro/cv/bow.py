@@ -21,7 +21,11 @@ Array = jax.Array
 def kmeans(key, desc: Array, weights: Array, *, k: int = 250, iters: int = 20):
     """Lloyd's k-means over descriptors (N, D) with sample weights (N,).
 
-    Returns centroids (k, D). Empty clusters are re-seeded from the data.
+    Returns centroids (k, D). Empty clusters KEEP their previous centroid
+    (the ``counts > 0`` guard below) — they are not re-seeded from the
+    data, so centroids are finite for any input, including an all-zero
+    weight vector (every cluster empty -> the init survives unchanged;
+    `tests/test_cv.py` pins this).
 
     Multi-octave descriptor sets (pipeline.extract_features(n_octaves>1))
     can carry many zero-weight rows — deep pyramid octaves of small images
@@ -48,22 +52,24 @@ def kmeans(key, desc: Array, weights: Array, *, k: int = 250, iters: int = 20):
     return cents
 
 
-def histogram(desc: Array, valid: Array, centroids: Array, *,
-              vc: VectorConfig = DEFAULT, use_kernel: bool = True) -> Array:
-    """Per-image normalized word histogram. desc (N, D), valid (N,) bool."""
-    K = centroids.shape[0]
-    if use_kernel:
-        idx, _ = kops.bow_assign(desc, centroids, vc=vc)
-    else:
-        idx, _ = kref.bow_assign_ref(desc, centroids)
-    w = valid.astype(jnp.float32)
-    h = jnp.zeros((K,), jnp.float32).at[idx].add(w)
-    return h / jnp.maximum(jnp.sum(h), 1e-6)
+def histograms(descs: Array, valids: Array, centroids: Array, *,
+               vc: VectorConfig = DEFAULT, use_kernel: bool = True,
+               fused: bool = False) -> Array:
+    """Normalized word histograms — the ONE histogram entry point.
 
-
-def batch_histograms(descs: Array, valids: Array, centroids: Array, *,
-                     vc: VectorConfig = DEFAULT, use_kernel: bool = True) -> Array:
-    """descs (B, N, D) -> (B, K)."""
+    Batched descs (B, N, D) + valids (B, N) -> (B, K); unbatched
+    (N, D) + (N,) -> (K,) through the same path (a leading batch axis of
+    one).  ``fused=True`` routes through the single-launch
+    quantize->histogram kernel (`kernels.bow.bow_quantize_hist` — the
+    `cv.classify.ClassifyPlan` fused rung); the default materializes
+    assignment indices (`bow_assign` / the jnp ref when
+    ``use_kernel=False``) and scatter-adds, which is what k-means
+    training reuses."""
+    if descs.ndim == 2:
+        return histograms(descs[None], valids[None], centroids, vc=vc,
+                          use_kernel=use_kernel, fused=fused)[0]
+    if fused:
+        return kops.bow_quantize_hist(descs, valids, centroids, vc=vc)
     B, N, D = descs.shape
     K = centroids.shape[0]
     if use_kernel:
@@ -75,3 +81,15 @@ def batch_histograms(descs: Array, valids: Array, centroids: Array, *,
     h = jnp.zeros((B, K), jnp.float32)
     h = h.at[jnp.arange(B)[:, None], idx].add(w)
     return h / jnp.maximum(jnp.sum(h, axis=1, keepdims=True), 1e-6)
+
+
+def histogram(desc: Array, valid: Array, centroids: Array, *,
+              vc: VectorConfig = DEFAULT, use_kernel: bool = True) -> Array:
+    """Per-image histogram — thin unbatched wrapper over `histograms`."""
+    return histograms(desc, valid, centroids, vc=vc, use_kernel=use_kernel)
+
+
+def batch_histograms(descs: Array, valids: Array, centroids: Array, *,
+                     vc: VectorConfig = DEFAULT, use_kernel: bool = True) -> Array:
+    """Batched histograms — thin alias kept for existing call sites."""
+    return histograms(descs, valids, centroids, vc=vc, use_kernel=use_kernel)

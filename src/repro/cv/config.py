@@ -1,0 +1,107 @@
+"""PipelineConfig — the one place the CV stack's knobs live.
+
+Before this module, the execution knobs (`mode=`, `ladder=`,
+`n_octaves=`, `preprocess=`, `max_kp=`, `vc=`) were threaded as loose
+keyword arguments through three layers (`cv/features.py`,
+`cv/pipeline.py`, `serve/cv_engine.py`), each re-declaring the same
+defaults.  `PipelineConfig` is the frozen, hashable bundle every entry
+point now accepts via ``config=``; the old per-function kwargs survive
+as deprecation shims (`resolve_config`) that emit exactly one
+`DeprecationWarning` per call and forward into the config.
+
+The classifier tail gets its own knobs here too: `head` selects the
+classifier head ("svm" | "gbdt"), `classify_mode`/`classify_ladder`
+pick the `cv.classify.ClassifyPlan` execution rung and degradation
+ladder ("fused" -> "ref") the same way `mode`/`ladder` do for the
+fused stencil chains.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from dataclasses import dataclass
+
+from repro.core.vector import VectorConfig, DEFAULT
+
+# kwargs that forward into the config WITH a DeprecationWarning (the
+# cross-layer sprawl this redesign removed); `max_kp`/`vc` stay plain
+# per-call conveniences (no warning) because they are single-function
+# tuning knobs, not cross-layer routing state.
+DEPRECATED_KWARGS = ("mode", "ladder", "n_octaves", "preprocess")
+
+CLASSIFY_HEADS = ("svm", "gbdt")
+
+# sentinel distinguishing "kwarg not passed" from an explicit None
+# (None is a meaningful value for mode= and ladder=)
+_UNSET = object()
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    """Frozen bundle of every CV-pipeline knob.
+
+    max_kp: keypoints (= descriptors) per image.
+    preprocess: run the fused blur->erode->grad denoise chain first.
+    n_octaves: >1 routes detection through the multi-octave pyramid.
+    mode / ladder: fused-chain execution plan + degradation ladder
+        (`kernels.stencil.MODES`), threaded to every fused launch.
+    head: classifier head — "svm" (one-vs-rest linear) or "gbdt"
+        (oblivious-tree ensemble, `cv.gbdt`).
+    classify_mode / classify_ladder: `ClassifyPlan` execution rung and
+        ladder over ("fused", "ref"); None mode = autotune-then-fused.
+    vc: kernel block-width config (`core.vector.VectorConfig`).
+    """
+    max_kp: int = 32
+    preprocess: bool = False
+    n_octaves: int = 1
+    mode: str | None = None
+    ladder: tuple[str, ...] | None = None
+    head: str = "svm"
+    classify_mode: str | None = None
+    classify_ladder: tuple[str, ...] | None = ("fused", "ref")
+    vc: VectorConfig = DEFAULT
+
+    def __post_init__(self):
+        # normalize list ladders to tuples so the config stays hashable
+        for f in ("ladder", "classify_ladder"):
+            v = getattr(self, f)
+            if v is not None and not isinstance(v, tuple):
+                object.__setattr__(self, f, tuple(v))
+        if self.head not in CLASSIFY_HEADS:
+            raise ValueError(f"PipelineConfig: unknown head {self.head!r} "
+                             f"(expected one of {CLASSIFY_HEADS})")
+
+    def replace(self, **kw) -> "PipelineConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def resolve_config(config: PipelineConfig | None = None, *, where: str,
+                   mode=_UNSET, ladder=_UNSET, n_octaves=_UNSET,
+                   preprocess=_UNSET, max_kp=_UNSET, vc=_UNSET,
+                   head=_UNSET) -> PipelineConfig:
+    """Merge legacy per-function kwargs into a PipelineConfig.
+
+    The deprecation shim shared by every entry point: legacy kwargs from
+    DEPRECATED_KWARGS emit exactly ONE DeprecationWarning per call (all
+    offenders aggregated into a single message) and then forward into
+    the config; `max_kp`/`vc`/`head` override silently.  Explicit kwargs
+    always win over the passed config's fields.
+    """
+    cfg = config if config is not None else PipelineConfig()
+    if not isinstance(cfg, PipelineConfig):
+        raise ValueError(f"{where}: config= expects a PipelineConfig, "
+                         f"got {type(cfg).__name__}")
+    overrides = {k: v for k, v in (("mode", mode), ("ladder", ladder),
+                                   ("n_octaves", n_octaves),
+                                   ("preprocess", preprocess),
+                                   ("max_kp", max_kp), ("vc", vc),
+                                   ("head", head))
+                 if v is not _UNSET}
+    deprecated = sorted(k for k in overrides if k in DEPRECATED_KWARGS)
+    if deprecated:
+        warnings.warn(
+            f"{where}: keyword argument(s) {', '.join(deprecated)} are "
+            f"deprecated — pass config=PipelineConfig(...) instead "
+            f"(the legacy kwargs still forward into the config)",
+            DeprecationWarning, stacklevel=3)
+    return cfg.replace(**overrides) if overrides else cfg

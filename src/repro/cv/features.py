@@ -21,6 +21,7 @@ from repro.core.vector import VectorConfig
 from repro.kernels import stencil
 
 from . import imgproc
+from .config import PipelineConfig, resolve_config, _UNSET
 
 Array = jax.Array
 
@@ -398,20 +399,28 @@ def describe_keypoints(det: dict, *, patch: int = 16) -> dict:
     return {"desc": desc, "valid": det["valid"]}
 
 
-def sift(img: Array, *, max_kp: int = 64, n_octaves: int = 1,
-         mode: str | None = None, ladder=None) -> dict:
-    """SIFT keypoints + descriptors.  n_octaves=1 is the single-octave
-    detector; n_octaves>1 routes through the multi-octave pyramid engine
-    (one fused launch per octave, `sift_pyramid`) with keypoints in
-    base-image coordinates — descriptors are sampled from the
+def sift(img: Array, config=None, *, max_kp=_UNSET, n_octaves=_UNSET,
+         mode=_UNSET, ladder=_UNSET) -> dict:
+    """SIFT keypoints + descriptors.  config.n_octaves=1 is the
+    single-octave detector; >1 routes through the multi-octave pyramid
+    engine (one fused launch per octave, `sift_pyramid`) with keypoints
+    in base-image coordinates — descriptors are sampled from the
     base-resolution gray at the mapped-back coordinates (fixed patch; the
-    per-octave-resolution patch is future work).  `mode`/`ladder` pick the
-    fused execution plan / degradation ladder (serving threads these
-    explicitly per rung — jit traces bake the plan in)."""
-    ladder = tuple(ladder) if ladder is not None else None
-    det = (detect_keypoints(img, max_kp=max_kp, mode=mode, ladder=ladder)
-           if n_octaves <= 1
-           else sift_pyramid(img, n_octaves=n_octaves, max_kp=max_kp,
-                             mode=mode, ladder=ladder))
+    per-octave-resolution patch is future work).  config.mode/.ladder
+    pick the fused execution plan / degradation ladder (serving threads
+    these explicitly per rung — jit traces bake the plan in).
+
+    Standalone calls keep the historical max_kp=64 default; a passed
+    `PipelineConfig` carries its own (the pipeline's 32)."""
+    cfg = resolve_config(config if config is not None
+                         else PipelineConfig(max_kp=64),
+                         where="features.sift", max_kp=max_kp,
+                         n_octaves=n_octaves, mode=mode, ladder=ladder)
+    det = (detect_keypoints(img, max_kp=cfg.max_kp, mode=cfg.mode,
+                            ladder=cfg.ladder)
+           if cfg.n_octaves <= 1
+           else sift_pyramid(img, n_octaves=cfg.n_octaves,
+                             max_kp=cfg.max_kp, mode=cfg.mode,
+                             ladder=cfg.ladder))
     d = describe_keypoints(det)
     return {"xy": det["xy"], "desc": d["desc"], "valid": det["valid"], "resp": det["resp"]}

@@ -1,9 +1,15 @@
-"""End-to-end BoW + SVM image-classification pipeline (paper §4.5).
+"""End-to-end BoW image-classification pipeline (paper §4.5).
 
 Training: SIFT keypoints -> descriptors -> k-means dictionary -> histograms
--> SVM. Testing (the timed path): (I) keypoint detection, (II) feature
-generation (descriptors + histogram), (III) prediction — matching the
-paper's three timed stages.
+-> classifier head (one-vs-rest SVM or oblivious-tree GBDT). Testing (the
+timed path): (I) keypoint detection, (II) feature generation (descriptors +
+histogram), (III) prediction — matching the paper's three timed stages.
+Stages II+III run through `cv.classify.ClassifyPlan` (the fused
+quantize->histogram->score tail: two Pallas launches per batch).
+
+Every entry point takes ``config=`` (`cv.config.PipelineConfig`); the old
+per-function kwargs (`mode=`, `ladder=`, `n_octaves=`, `preprocess=`)
+survive as deprecation shims through `cv.config.resolve_config`.
 
 Runs on the synthetic CIFAR-like dataset from repro.data.images
 (the real CIFAR-10 is not available offline; the compute character —
@@ -18,9 +24,8 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.core.vector import VectorConfig, DEFAULT
-
-from . import bow, features, imgproc, svm
+from . import bow, classify, features, gbdt as gbdt_mod, imgproc, svm
+from .config import PipelineConfig, resolve_config, _UNSET
 
 Array = jax.Array
 
@@ -29,6 +34,13 @@ Array = jax.Array
 class BowSvmModel:
     centroids: Array
     svm: dict
+    n_classes: int
+
+
+@dataclass
+class BowGbdtModel:
+    centroids: Array
+    gbdt: gbdt_mod.GbdtModel
     n_classes: int
 
 
@@ -57,76 +69,98 @@ def validate_images(imgs, *, name: str = "imgs") -> None:
                 "producer")
 
 
-def extract_features(imgs: Array, *, max_kp: int = 32,
-                     preprocess: bool = False, n_octaves: int = 1,
-                     vc: VectorConfig = DEFAULT, mode: str | None = None,
-                     ladder=None, validate: bool = True) -> dict:
+def extract_features(imgs: Array, config: PipelineConfig | None = None, *,
+                     max_kp=_UNSET, preprocess=_UNSET, n_octaves=_UNSET,
+                     vc=_UNSET, mode=_UNSET, ladder=_UNSET,
+                     validate: bool = True) -> dict:
     """(B, H, W[, C]) -> stacked descriptor sets (jit + vmap over images).
 
-    preprocess=True runs the fused blur -> erode -> gradient-magnitude
-    denoising chain (imgproc.preprocess_bow) as a single Pallas launch over
-    the whole batch before keypoint detection — one kernel launch per image
-    batch instead of one per op/channel/image.
+    config.preprocess=True runs the fused blur -> erode -> gradient-
+    magnitude denoising chain (imgproc.preprocess_bow) as a single Pallas
+    launch over the whole batch before keypoint detection — one kernel
+    launch per image batch instead of one per op/channel/image.
 
-    n_octaves>1 routes keypoint detection through the multi-octave pyramid
-    engine (features.sift_pyramid: one fused launch per octave, chained
-    through the next_base band) so the paper's end-to-end BoW workload runs
-    on the fused path; keypoints land in base-image coordinates, so the
-    descriptor/histogram stages downstream are unchanged.
+    config.n_octaves>1 routes keypoint detection through the multi-octave
+    pyramid engine (features.sift_pyramid: one fused launch per octave,
+    chained through the next_base band) so the paper's end-to-end BoW
+    workload runs on the fused path; keypoints land in base-image
+    coordinates, so the descriptor/histogram stages downstream are
+    unchanged.
 
-    `mode`/`ladder` thread the fused-chain execution plan / degradation
-    ladder down to every fused launch (the serving engine drives its rung
-    switching through these — they reach jitted code as static arguments,
-    which a global default cannot)."""
+    config.mode/.ladder thread the fused-chain execution plan /
+    degradation ladder down to every fused launch (the serving engine
+    drives its rung switching through these — they reach jitted code as
+    static arguments, which a global default cannot)."""
+    cfg = resolve_config(config, where="pipeline.extract_features",
+                         max_kp=max_kp, preprocess=preprocess,
+                         n_octaves=n_octaves, vc=vc, mode=mode,
+                         ladder=ladder)
     if validate:
         validate_images(imgs)
-    ladder = tuple(ladder) if ladder is not None else None
-    if preprocess:
+    if cfg.preprocess:
         x = imgs.astype(jnp.float32)
         if x.ndim == 3:      # (B, H, W) gray batch: add/strip a channel axis
-            imgs = imgproc.preprocess_bow(x[..., None], vc=vc,
-                                          mode=mode, ladder=ladder)[..., 0]
+            imgs = imgproc.preprocess_bow(x[..., None], vc=cfg.vc,
+                                          mode=cfg.mode,
+                                          ladder=cfg.ladder)[..., 0]
         else:
-            imgs = imgproc.preprocess_bow(x, vc=vc, mode=mode, ladder=ladder)
+            imgs = imgproc.preprocess_bow(x, vc=cfg.vc, mode=cfg.mode,
+                                          ladder=cfg.ladder)
     def one(img):
-        out = features.sift(img, max_kp=max_kp, n_octaves=n_octaves,
-                            mode=mode, ladder=ladder)
+        out = features.sift(img, config=cfg)
         return {"desc": out["desc"], "valid": out["valid"]}
     return jax.lax.map(one, imgs.astype(jnp.float32), batch_size=16)
 
 
-def train(key, imgs: Array, labels: Array, *, n_classes: int = 10, dict_size: int = 250,
-          max_kp: int = 32, preprocess: bool = False, n_octaves: int = 1,
-          vc: VectorConfig = DEFAULT, mode: str | None = None,
-          ladder=None) -> BowSvmModel:
-    feats = extract_features(imgs, max_kp=max_kp, preprocess=preprocess,
-                             n_octaves=n_octaves, vc=vc, mode=mode,
-                             ladder=ladder)
+def train(key, imgs: Array, labels: Array,
+          config: PipelineConfig | None = None, *, n_classes: int = 10,
+          dict_size: int = 250, max_kp=_UNSET, preprocess=_UNSET,
+          n_octaves=_UNSET, vc=_UNSET, mode=_UNSET, ladder=_UNSET,
+          head=_UNSET):
+    """Fit the dictionary + the configured classifier head.
+
+    Returns a `BowSvmModel` (config.head == "svm", the default) or a
+    `BowGbdtModel` (config.head == "gbdt") — both feed
+    `classify.build_plan`."""
+    cfg = resolve_config(config, where="pipeline.train", max_kp=max_kp,
+                         preprocess=preprocess, n_octaves=n_octaves, vc=vc,
+                         mode=mode, ladder=ladder, head=head)
+    feats = extract_features(imgs, cfg)
     B, N, D = feats["desc"].shape
     desc = feats["desc"].reshape(B * N, D)
     wts = feats["valid"].reshape(B * N).astype(jnp.float32)
     cents = bow.kmeans(key, desc, wts, k=dict_size)
-    hists = bow.batch_histograms(feats["desc"], feats["valid"], cents, vc=vc)
+    hists = bow.histograms(feats["desc"], feats["valid"], cents, vc=cfg.vc)
+    if cfg.head == "gbdt":
+        model = gbdt_mod.gbdt_train(hists, labels, n_classes=n_classes)
+        return BowGbdtModel(centroids=cents, gbdt=model, n_classes=n_classes)
     model = svm.svm_train(hists, labels, n_classes=n_classes)
     return BowSvmModel(centroids=cents, svm=model, n_classes=n_classes)
 
 
-def predict(model: BowSvmModel, imgs: Array, *, max_kp: int = 32,
-            preprocess: bool = False, n_octaves: int = 1,
-            vc: VectorConfig = DEFAULT, mode: str | None = None,
-            ladder=None, validate: bool = True,
-            timing: dict | None = None) -> Array:
-    """The paper's three timed test stages."""
+def predict(model, imgs: Array, config: PipelineConfig | None = None, *,
+            max_kp=_UNSET, preprocess=_UNSET, n_octaves=_UNSET, vc=_UNSET,
+            mode=_UNSET, ladder=_UNSET, validate: bool = True,
+            timing: dict | None = None,
+            plan: classify.ClassifyPlan | None = None) -> Array:
+    """The paper's three timed test stages, stages II+III through the
+    `ClassifyPlan` seam (pass ``plan=`` to reuse a pre-built one — the
+    serving engine does)."""
+    cfg = resolve_config(config, where="pipeline.predict", max_kp=max_kp,
+                         preprocess=preprocess, n_octaves=n_octaves, vc=vc,
+                         mode=mode, ladder=ladder)
+    if validate:            # input validation fires before any model use
+        validate_images(imgs)
+    if plan is None:
+        plan = classify.build_plan(model, cfg)
     t0 = time.perf_counter()
-    feats = extract_features(imgs, max_kp=max_kp, preprocess=preprocess,
-                             n_octaves=n_octaves, vc=vc, mode=mode,
-                             ladder=ladder, validate=validate)
+    feats = extract_features(imgs, cfg, validate=False)
     jax.block_until_ready(feats["desc"])
     t1 = time.perf_counter()
-    hists = bow.batch_histograms(feats["desc"], feats["valid"], model.centroids, vc=vc)
+    hists = plan.histograms(feats["desc"], feats["valid"])
     jax.block_until_ready(hists)
     t2 = time.perf_counter()
-    pred = svm.svm_predict(model.svm, hists)
+    pred = plan.classify(hists)
     jax.block_until_ready(pred)
     t3 = time.perf_counter()
     if timing is not None:
@@ -136,6 +170,7 @@ def predict(model: BowSvmModel, imgs: Array, *, max_kp: int = 32,
     return pred
 
 
-def accuracy(model: BowSvmModel, imgs: Array, labels: Array, **kw) -> float:
-    pred = predict(model, imgs, **kw)
+def accuracy(model, imgs: Array, labels: Array,
+             config: PipelineConfig | None = None, **kw) -> float:
+    pred = predict(model, imgs, config, **kw)
     return float(jnp.mean((pred == labels).astype(jnp.float32)))

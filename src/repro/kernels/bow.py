@@ -1,12 +1,29 @@
-"""Pallas TPU kernel: bag-of-words nearest-centroid assignment.
+"""Pallas TPU kernels: the BoW classifier tail (quantize -> histogram -> score).
 
 The BoW feature-generation hot loop (paper §4.5) is "for every SIFT
 descriptor, find the nearest dictionary centroid". On TPU this is an
 MXU problem: d2(n, k) = |d_n|^2 - 2 d_n.c_k + |c_k|^2, i.e. a (N,128) x
-(128,K) matmul. The kernel fuses the matmul with a *running argmin* across
-centroid blocks (flash-attention-style streaming state in VMEM scratch),
-so the (N, K) distance matrix is never materialized in HBM — a
+(128,K) matmul. `bow_assign` fuses the matmul with a *running argmin*
+across centroid blocks (flash-attention-style streaming state in VMEM
+scratch), so the (N, K) distance matrix is never materialized in HBM — a
 beyond-paper fusion recorded in EXPERIMENTS.md §Perf.
+
+`bow_quantize_hist` goes one step further for the classify path: the
+assignment indices themselves never reach HBM either.  One kernel walks
+descriptor blocks x centroid blocks with the codebook VMEM-resident,
+finishes each descriptor block's running argmin, and segment-sums the
+block's valid-weights straight into a per-image histogram accumulated in
+the revisited output block — the whole quantize->histogram stage is one
+launch per batch.  `linear_score` is the one-vs-rest SVM decision matmul
+(scores = h @ W^T + b) as a single launch with the class weights
+VMEM-resident.
+
+Arithmetic contract (the `ClassifyPlan` oracle relies on it): distances
+are computed as  s = -2 d.c + |c|^2  (|d|^2 is argmin-invariant and
+dropped), exactly mirroring `kernels.ref.bow_hist_ref` — histogram
+counts are order-independent sums of {0, 1} weights, so fused histograms
+are bit-identical to the staged oracle whenever the per-element dot
+products agree (same contraction dim, no D padding).
 
 lmul scales the descriptor-block rows (8 f32 sublanes x lmul).
 """
@@ -24,13 +41,28 @@ from repro.core.vector import VectorConfig
 Array = jax.Array
 
 
+def _pad_codebook(centroids: Array, bk: int):
+    """Pad (K, D) centroids to a bk multiple; pad rows masked with +inf
+    |c|^2 so the running argmin can never select them."""
+    K = centroids.shape[0]
+    k_pad = (-K) % bk
+    c = jnp.pad(centroids.astype(jnp.float32), ((0, k_pad), (0, 0)))
+    c2 = jnp.sum(c * c, axis=1)
+    c2 = jnp.where(jnp.arange(c.shape[0]) < K, c2, jnp.inf)
+    return c, c2
+
+
 def _bow_kernel(d_ref, c_ref, c2_ref, idx_ref, val_ref, minv, mini, *, bn, bk):
     kb = pl.program_id(1)
     nk = pl.num_programs(1)
 
+    # +inf init (not a large-finite sentinel): the first real centroid
+    # block always wins the compare, even for all-padding descriptor
+    # blocks or pathological descriptor magnitudes whose true distance
+    # exceeds any finite sentinel (the empty-descriptor-block edge).
     @pl.when(kb == 0)
     def _init():
-        minv[...] = jnp.full((bn,), 1e30, jnp.float32)
+        minv[...] = jnp.full((bn,), jnp.inf, jnp.float32)
         mini[...] = jnp.zeros((bn,), jnp.int32)
 
     d = d_ref[...]                                     # (bn, D) f32
@@ -53,20 +85,26 @@ def _bow_kernel(d_ref, c_ref, c2_ref, idx_ref, val_ref, minv, mini, *, bn, bk):
 
 @functools.partial(jax.jit, static_argnames=("vc",))
 def bow_assign(desc: Array, centroids: Array, *, vc: VectorConfig = VectorConfig()):
-    """desc (N, D) f32, centroids (K, D) f32 -> (idx (N,) i32, d2 (N,) f32).
+    """desc (N, D) or batched (B, N, D), centroids (K, D) f32
+    -> (idx i32, d2 f32) with the input's leading shape.
 
     d2 is the true squared distance (|d|^2 added back outside the kernel).
+    The batched form flattens image rows into one blocked grid — the
+    codebook stays VMEM-resident across every (row-block, centroid-block)
+    step, descriptors stream through in (32*lmul)-row blocks.
     """
+    if desc.ndim == 3:                     # blocked batched form
+        B, N, D = desc.shape
+        idx, d2 = bow_assign(desc.reshape(B * N, D), centroids, vc=vc)
+        return idx.reshape(B, N), d2.reshape(B, N)
     N, D = desc.shape
-    K = centroids.shape[0]
+    if N == 0:                             # empty descriptor set: no launch
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32))
     bn = vc.rows(jnp.float32) * 4          # MXU-friendly: 32*lmul rows
     bk = 128
     n_pad = (-N) % bn
-    k_pad = (-K) % bk
     d = jnp.pad(desc.astype(jnp.float32), ((0, n_pad), (0, 0)))
-    c = jnp.pad(centroids.astype(jnp.float32), ((0, k_pad), (0, 0)))
-    c2 = jnp.sum(c * c, axis=1)
-    c2 = jnp.where(jnp.arange(c.shape[0]) < K, c2, 1e30)   # mask pad centroids
+    c, c2 = _pad_codebook(centroids, bk)
 
     idx, val = pl.pallas_call(
         functools.partial(_bow_kernel, bn=bn, bk=bk),
@@ -92,3 +130,137 @@ def bow_assign(desc: Array, centroids: Array, *, vc: VectorConfig = VectorConfig
     )(d, c, c2)
     d2 = val[:N] + jnp.sum(desc.astype(jnp.float32) ** 2, axis=1)
     return idx[:N], d2
+
+
+def _hist_kernel(d_ref, w_ref, c_ref, c2_ref, h_ref, minv, mini, *, bn, bk, kp):
+    nb = pl.program_id(1)
+    kb = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    # the output block is revisited for every (n, k) step of this image:
+    # zero it once, accumulate at each descriptor block's final k step
+    @pl.when(jnp.logical_and(nb == 0, kb == 0))
+    def _zero():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    @pl.when(kb == 0)
+    def _init():
+        minv[...] = jnp.full((bn,), jnp.inf, jnp.float32)
+        mini[...] = jnp.zeros((bn,), jnp.int32)
+
+    d = d_ref[0]                                       # (bn, D) f32
+    c = c_ref[...]                                     # (bk, D) f32
+    s = -2.0 * jax.lax.dot_general(d, c, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+    s = s + c2_ref[...][None, :]
+    bmin = jnp.min(s, axis=1)
+    barg = jnp.argmin(s, axis=1).astype(jnp.int32) + kb * bk
+    better = bmin < minv[...]
+    mini[...] = jnp.where(better, barg, mini[...])
+    minv[...] = jnp.where(better, bmin, minv[...])
+
+    @pl.when(kb == nk - 1)
+    def _accumulate():
+        # segment-sum of the block's valid weights by winning centroid:
+        # one-hot(assignment) scaled by weight, reduced over rows — the
+        # assignment indices stay in VMEM scratch, never reaching HBM
+        w = w_ref[0]                                   # (bn,) f32
+        oh = (jax.lax.broadcasted_iota(jnp.int32, (bn, kp), 1)
+              == mini[...][:, None]).astype(jnp.float32)
+        h_ref[...] += jnp.sum(oh * w[:, None], axis=0)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("vc", "normalize"))
+def bow_quantize_hist(descs: Array, valids: Array, centroids: Array, *,
+                      vc: VectorConfig = VectorConfig(),
+                      normalize: bool = True) -> Array:
+    """Fused quantize->histogram: descs (B, N, D), valids (B, N) ->
+    normalized word histograms (B, K) in ONE launch.
+
+    Grid (B, N/bn, K/bk): per image, descriptor blocks stream against the
+    VMEM-resident codebook with a running argmin; each block's final
+    centroid step segment-sums its valid-weights into the image's
+    histogram (accumulated in the revisited output block).  Neither the
+    (N, K) distance matrix nor the (B, N) index array is materialized.
+    Pad descriptor rows ride along with weight 0.
+    """
+    B, N, D = descs.shape
+    K = centroids.shape[0]
+    w = valids.astype(jnp.float32)
+    if N == 0:
+        h = jnp.zeros((B, K), jnp.float32)
+        return h / jnp.maximum(jnp.sum(h, axis=1, keepdims=True), 1e-6) \
+            if normalize else h
+    # descriptor block: 32*lmul rows, shrunk (sublane-aligned) for small
+    # per-image keypoint budgets so a 32-descriptor image is one block
+    bn = min(vc.rows(jnp.float32) * 4, ((N + 31) // 32) * 32)
+    bk = 128
+    n_pad = (-N) % bn
+    d = jnp.pad(descs.astype(jnp.float32), ((0, 0), (0, n_pad), (0, 0)))
+    w = jnp.pad(w, ((0, 0), (0, n_pad)))
+    c, c2 = _pad_codebook(centroids, bk)
+    kp = c.shape[0]
+
+    h = pl.pallas_call(
+        functools.partial(_hist_kernel, bn=bn, bk=bk, kp=kp),
+        grid=(B, d.shape[1] // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((1, bn, D), lambda b, n, k: (b, n, 0)),
+            pl.BlockSpec((1, bn), lambda b, n, k: (b, n)),
+            pl.BlockSpec((bk, D), lambda b, n, k: (k, 0)),
+            pl.BlockSpec((bk,), lambda b, n, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((1, kp), lambda b, n, k: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, kp), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bn,), jnp.float32),
+            pltpu.VMEM((bn,), jnp.int32),
+        ],
+        interpret=vc.run_interpret,
+    )(d, w, c, c2)
+    h = h[:, :K]
+    if normalize:
+        h = h / jnp.maximum(jnp.sum(h, axis=1, keepdims=True), 1e-6)
+    return h
+
+
+def _score_kernel(h_ref, w_ref, b_ref, s_ref):
+    h = h_ref[...]                                     # (bb, Kp) f32
+    w = w_ref[...]                                     # (Cp, Kp) f32
+    s = jax.lax.dot_general(h, w, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s_ref[...] = s + b_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("vc",))
+def linear_score(hists: Array, w: Array, b: Array, *,
+                 vc: VectorConfig = VectorConfig()) -> Array:
+    """Fused one-vs-rest linear scoring: hists (B, K), w (C, K), b (C,)
+    -> decision scores (B, C) f32 in one launch, weights VMEM-resident.
+
+    Zero-padded K/C margins: pad classes score b_pad = -inf so a
+    downstream argmax can never pick them (they are sliced off here
+    anyway); pad histogram words multiply zero weights.
+    """
+    B, K = hists.shape
+    C = w.shape[0]
+    bb = vc.rows(jnp.float32) * 4
+    bp, kp, cp = (-B) % bb, (-K) % 128, (-C) % 128
+    h = jnp.pad(hists.astype(jnp.float32), ((0, bp), (0, kp)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, cp), (0, kp)))
+    bv = jnp.pad(b.astype(jnp.float32), (0, cp),
+                 constant_values=-jnp.inf)
+    s = pl.pallas_call(
+        _score_kernel,
+        grid=(h.shape[0] // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, h.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec(wp.shape, lambda i: (0, 0)),
+            pl.BlockSpec(bv.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, bv.shape[0]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h.shape[0], bv.shape[0]),
+                                       jnp.float32),
+        interpret=vc.run_interpret,
+    )(h, wp, bv)
+    return s[:B, :C]

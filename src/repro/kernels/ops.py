@@ -14,8 +14,9 @@ from repro.core.vector import VectorConfig, DEFAULT, SEQ_VECTOR  # noqa: F401
 
 from . import ref
 from .attention import flash_attention  # noqa: F401
-from .bow import bow_assign  # noqa: F401
+from .bow import bow_assign, bow_quantize_hist, linear_score  # noqa: F401
 from .erode import dilate, erode  # noqa: F401
+from .gbdt import gbdt_score  # noqa: F401
 from .filter2d import filter2d, sep_filter2d  # noqa: F401
 from .stencil import (fused_chain, Stage,  # noqa: F401
                       affine_disp_bound, affine_stage, box_stage,

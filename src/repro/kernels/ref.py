@@ -437,6 +437,55 @@ def svm_decision_ref(x: Array, w: Array, b: Array) -> Array:
     return x @ w.T + b[None, :]
 
 
+def bow_hist_ref(descs: Array, valids: Array, centroids: Array, *,
+                 normalize: bool = True) -> Array:
+    """Staged quantize->histogram oracle for the fused classify head:
+    descs (B, N, D), valids (B, N) -> (B, K) word histograms.
+
+    The assignment arithmetic mirrors `kernels.bow._hist_kernel`
+    expression-for-expression —  s = -2 d.c + |c|^2  with |d|^2 dropped
+    (argmin-invariant), argmin ties to the lowest index — so the fused
+    plan's histograms are bit-identical to this staged path (histogram
+    counts are order-independent sums of {0, 1} weights).  Contrast
+    `bow_assign_ref`, which returns true squared distances and therefore
+    may break distance *ties* differently under float rounding.
+    """
+    B, N, D = descs.shape
+    K = centroids.shape[0]
+    d = descs.astype(jnp.float32).reshape(B * N, D)
+    c = centroids.astype(jnp.float32)
+    s = -2.0 * d @ c.T + jnp.sum(c * c, axis=1)[None, :]
+    idx = jnp.argmin(s, axis=1).astype(jnp.int32).reshape(B, N)
+    w = valids.astype(jnp.float32)
+    h = jnp.zeros((B, K), jnp.float32)
+    h = h.at[jnp.arange(B)[:, None], idx].add(w)
+    if normalize:
+        h = h / jnp.maximum(jnp.sum(h, axis=1, keepdims=True), 1e-6)
+    return h
+
+
+def gbdt_leaf_ref(x: Array, feat: Array, thr: Array) -> Array:
+    """Oblivious-tree leaf indices: x (B, F), feat/thr (T, depth) ->
+    (B, T) int32.  Level l contributes bit 2^l (little-endian in level),
+    the same bit layout `kernels.gbdt` packs via its powers-of-two
+    matmul — leaf indices are exact in both paths (float compares on
+    identical inputs), so fused-vs-ref leaf match is bitwise."""
+    xv = x.astype(jnp.float32)[:, feat]                  # (B, T, depth)
+    bits = (xv > thr[None].astype(jnp.float32)).astype(jnp.int32)
+    pw = (2 ** jnp.arange(feat.shape[1])).astype(jnp.int32)
+    return jnp.sum(bits * pw[None, None, :], axis=-1).astype(jnp.int32)
+
+
+def gbdt_scores_ref(x: Array, feat: Array, thr: Array, leaf: Array,
+                    base: Array) -> Array:
+    """Staged GBDT ensemble scores: leaf (T, 2^depth, C), base (C,) ->
+    (B, C) = base + sum_t leaf[t, leaf_index_t]."""
+    lidx = gbdt_leaf_ref(x, feat, thr)                   # (B, T)
+    T = leaf.shape[0]
+    picked = leaf[jnp.arange(T)[None, :], lidx]          # (B, T, C)
+    return base[None, :] + jnp.sum(picked, axis=1)
+
+
 def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True) -> Array:
     """q/k/v (B, S, H, hd) -> (B, S, H, hd), fp32 softmax."""
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))

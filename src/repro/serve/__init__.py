@@ -1,3 +1,14 @@
-# the LM serving steps (prefill/decode/generate) live in cv_engine too —
-# one serving front end (the old serve/engine.py was folded in)
-from . import cv_engine, health, shard_dispatch  # noqa: F401
+"""repro.serve — the fault-tolerant serving front end.
+
+Stable public surface (pinned by tests/test_pipeline_config.py):
+`CvEngine` + its `Request`/`Response` envelope, plus the submodules.
+The LM serving steps (prefill/decode/generate) live in cv_engine too —
+one serving front end (the old serve/engine.py was folded in).
+"""
+from . import cv_engine, health, shard_dispatch
+from .cv_engine import CvEngine, Request, Response
+
+__all__ = [
+    "cv_engine", "health", "shard_dispatch",
+    "CvEngine", "Request", "Response",
+]

@@ -55,7 +55,8 @@ import numpy as np
 
 from repro.core import faultinject
 from repro.core import autotune
-from repro.cv import bow, features, pipeline, svm
+from repro.cv import classify, features, pipeline
+from repro.cv.config import PipelineConfig, resolve_config, _UNSET
 from repro.kernels import stencil
 from repro.serve.shard_dispatch import ShardDispatcher
 from repro.train.fault import StragglerWatchdog
@@ -94,14 +95,18 @@ class CvEngine:
     """Batch-serving engine over `cv.pipeline` with a degradation ladder.
 
     task="extract" serves descriptor sets (no model needed);
-    task="classify" serves class predictions through `pipeline.predict`
-    (pass a trained `BowSvmModel`)."""
+    task="classify" serves class predictions through the
+    `cv.classify.ClassifyPlan` tail (pass a trained `BowSvmModel` /
+    `BowGbdtModel`).  Pipeline knobs come in via ``config=``
+    (`cv.config.PipelineConfig`); the old `n_octaves=`/`preprocess=`
+    kwargs survive as deprecation shims."""
 
-    def __init__(self, model=None, *, buckets=DEFAULT_BUCKETS,
+    def __init__(self, model=None, config: PipelineConfig | None = None, *,
+                 buckets=DEFAULT_BUCKETS,
                  max_batch: int = 64, ladder=DEFAULT_LADDER,
                  max_retries: int = 1, backoff_s: float = 0.01,
-                 bad_input: str = "sanitize", max_kp: int = 32,
-                 n_octaves: int = 1, preprocess: bool = False,
+                 bad_input: str = "sanitize", max_kp=_UNSET,
+                 n_octaves=_UNSET, preprocess=_UNSET,
                  capture_frames: bool = False, watchdog=None,
                  mesh=None, dispatcher: ShardDispatcher | None = None):
         if bad_input not in ("sanitize", "reject"):
@@ -113,16 +118,21 @@ class CvEngine:
         for rung in ladder:
             if rung not in stencil.MODES:
                 raise ValueError(f"unknown ladder rung {rung!r}")
+        cfg = resolve_config(config, where="CvEngine", max_kp=max_kp,
+                             n_octaves=n_octaves, preprocess=preprocess)
         self.model = model
+        self.config = cfg
+        self.plan = (classify.build_plan(model, cfg)
+                     if model is not None else None)
         self.buckets = tuple(sorted(tuple(b) for b in buckets))
         self.max_batch = int(max_batch)
         self.ladder = ladder
         self.max_retries = int(max_retries)
         self.backoff_s = float(backoff_s)
         self.bad_input = bad_input
-        self.max_kp = int(max_kp)
-        self.n_octaves = int(n_octaves)
-        self.preprocess = bool(preprocess)
+        self.max_kp = int(cfg.max_kp)
+        self.n_octaves = int(cfg.n_octaves)
+        self.preprocess = bool(cfg.preprocess)
         self.capture_frames = bool(capture_frames)
         self.watchdog = watchdog if watchdog is not None else \
             StragglerWatchdog(threshold=4.0, warmup=2)
@@ -214,15 +224,18 @@ class CvEngine:
         -> dict of batch-leading jax arrays.  No host sync, no timing —
         it must trace under `shard_map`, so both the local ladder
         (`_run_batch`) and the sharded dispatcher run through it; the
-        classify composition matches `pipeline.predict` numerically."""
-        feats = pipeline.extract_features(x, max_kp=self.max_kp,
-                                          preprocess=self.preprocess,
-                                          n_octaves=self.n_octaves,
-                                          mode=rung, validate=False)
-        if self.model is not None:
-            hists = bow.batch_histograms(feats["desc"], feats["valid"],
-                                         self.model.centroids)
-            return {"pred": svm.svm_predict(self.model.svm, hists)}
+        classify composition matches `pipeline.predict` numerically.
+
+        The stencil rung maps onto the classifier tail's two rungs: the
+        jnp floor ("ref") classifies through the staged oracle, every
+        fused stencil rung classifies through the fused tail."""
+        feats = pipeline.extract_features(
+            x, self.config.replace(mode=rung), validate=False)
+        if self.plan is not None:
+            cmode = "ref" if rung == "ref" else "fused"
+            hists = self.plan.histograms(feats["desc"], feats["valid"],
+                                         mode=cmode)
+            return {"pred": self.plan.classify(hists, mode=cmode)}
         return {"desc": feats["desc"], "valid": feats["valid"]}
 
     def _run_batch(self, batch: np.ndarray, rung: str):
@@ -466,7 +479,8 @@ class CvEngine:
 
     def classify(self, imgs) -> list[Response]:
         if self.model is None:
-            raise ValueError("classify needs a trained BowSvmModel")
+            raise ValueError("classify needs a trained model "
+                             "(BowSvmModel or BowGbdtModel)")
         return self.submit(imgs)
 
 

@@ -1,0 +1,206 @@
+"""ClassifyPlan — the fused classifier-tail seam (quantize -> histogram
+-> classify) behind `cv.classify`.
+
+Pins the three-part oracle contract (fused histograms and SVM scores
+bit-identical to the staged jnp ref; GBDT leaf indices exact), the
+degradation-ladder semantics (fused -> ref with a recorded event;
+ValueError always raises), the mode-resolution chain, the structural
+launch count (the whole fused tail = 2 pallas_calls), and the routing
+of `pipeline.predict` / `build_plan` through the seam."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import faultinject
+from repro.core.vector import VectorConfig
+from repro.cv.classify import (CLASSIFY_MODES, ClassifyPlan, build_plan,
+                               resolve_classify_rungs)
+from repro.cv.gbdt import GbdtModel
+from repro.cv import pipeline
+from repro.kernels.stencil import count_pallas_calls
+
+VC = VectorConfig(lmul=1)
+
+
+def _svm_plan(rng, *, b=4, n=32, d=32, k=250, c=6, **kw):
+    descs = jnp.asarray(rng.standard_normal((b, n, d)), jnp.float32)
+    valids = jnp.asarray(rng.random((b, n)) < 0.75)
+    cents = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((c, k)), jnp.float32)
+    bias = jnp.asarray(rng.standard_normal(c), jnp.float32)
+    plan = ClassifyPlan(centroids=cents, n_classes=c, head="svm", w=w,
+                       b=bias, vc=VC, **kw)
+    return plan, descs, valids
+
+
+def _gbdt_plan(rng, svm_plan, *, n_trees=4, depth=3):
+    c = svm_plan.n_classes
+    k = svm_plan.centroids.shape[0]
+    gm = GbdtModel(
+        feat=jnp.asarray(rng.integers(0, k, (n_trees, depth)), jnp.int32),
+        thr=jnp.asarray(rng.standard_normal((n_trees, depth)) * 0.01,
+                        jnp.float32),
+        leaf=jnp.asarray(rng.standard_normal((n_trees, 2 ** depth, c)),
+                         jnp.float32),
+        base=jnp.asarray(rng.standard_normal(c), jnp.float32),
+        n_classes=c)
+    return ClassifyPlan(centroids=svm_plan.centroids, n_classes=c,
+                        head="gbdt", gbdt=gm, vc=VC)
+
+
+# -- oracle contract ---------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.uint8])
+def test_hist_and_svm_scores_bit_identical(rng, dtype):
+    plan, descs, valids = _svm_plan(rng)
+    if dtype == jnp.uint8:
+        descs = (jnp.abs(descs) * 40).astype(jnp.uint8)
+    hf = plan.histograms(descs, valids, mode="fused")
+    hr = plan.histograms(descs, valids, mode="ref")
+    np.testing.assert_array_equal(np.asarray(hf), np.asarray(hr))
+    sf = plan.scores(hf, mode="fused")
+    sr = plan.scores(hf, mode="ref")
+    np.testing.assert_array_equal(np.asarray(sf), np.asarray(sr))
+
+
+def test_hist_bit_identical_ragged_masks(rng):
+    # ragged per-image valid counts, including an all-invalid image
+    plan, descs, valids = _svm_plan(rng, b=5, n=48)
+    counts = [0, 1, 7, 48, 20]
+    valids = jnp.stack([jnp.arange(48) < c for c in counts])
+    hf = plan.histograms(descs, valids, mode="fused")
+    hr = plan.histograms(descs, valids, mode="ref")
+    np.testing.assert_array_equal(np.asarray(hf), np.asarray(hr))
+    assert bool(jnp.all(hf[0] == 0.0))       # empty image: all-zero histogram
+
+
+def test_gbdt_leaf_indices_exact_and_labels_match(rng):
+    splan, descs, valids = _svm_plan(rng)
+    plan = _gbdt_plan(rng, splan)
+    h = plan.histograms(descs, valids, mode="ref")
+    lf = plan.leaf_indices(h, mode="fused")
+    lr = plan.leaf_indices(h, mode="ref")
+    np.testing.assert_array_equal(np.asarray(lf), np.asarray(lr))
+    np.testing.assert_array_equal(
+        np.asarray(plan.classify(h, mode="fused")),
+        np.asarray(plan.classify(h, mode="ref")))
+
+
+def test_call_returns_consistent_bundle(rng):
+    plan, descs, valids = _svm_plan(rng)
+    out = plan(descs, valids, mode="fused")
+    assert set(out) == {"hist", "scores", "label"}
+    np.testing.assert_array_equal(
+        np.asarray(out["label"]),
+        np.asarray(jnp.argmax(out["scores"], axis=1)))
+
+
+# -- structure ---------------------------------------------------------------
+
+def test_fused_tail_is_two_launches(rng):
+    plan, descs, valids = _svm_plan(rng)
+    n = count_pallas_calls(
+        lambda d, v: plan.scores(plan.histograms(d, v, mode="fused"),
+                                 mode="fused"), descs, valids)
+    assert n == 2, f"fused tail lowered to {n} pallas_calls, wanted 2"
+    n = count_pallas_calls(
+        lambda d, v: plan.scores(plan.histograms(d, v, mode="ref"),
+                                 mode="ref"), descs, valids)
+    assert n == 0
+
+
+# -- ladder + mode resolution ------------------------------------------------
+
+def test_resolve_rungs():
+    assert resolve_classify_rungs("fused", ("fused", "ref")) == ("fused", "ref")
+    assert resolve_classify_rungs("ref", ("fused", "ref")) == ("ref",)
+    assert resolve_classify_rungs("fused", None) == ("fused",)
+    with pytest.raises(ValueError, match="unknown mode"):
+        resolve_classify_rungs("streaming", ("fused", "ref"))
+    with pytest.raises(ValueError, match="unknown ladder rung"):
+        resolve_classify_rungs("fused", ("fused", "window"))
+
+
+def test_ladder_degrades_fused_to_ref(rng):
+    plan, descs, valids = _svm_plan(rng)
+    expect = plan.histograms(descs, valids, mode="ref")
+    faultinject.clear_degradation_log()
+    try:
+        with faultinject.inject("lowering_error:count=1"):
+            h = plan.histograms(descs, valids, mode="fused")
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(expect))
+        events = [e for e in faultinject.degradation_log()
+                  if e.stage == "classify_hist"]
+        assert len(events) == 1
+        assert (events[0].from_plan, events[0].to_plan) == ("fused", "ref")
+    finally:
+        faultinject.clear_degradation_log()
+
+
+def test_no_ladder_raises_on_fault(rng):
+    plan, descs, valids = _svm_plan(rng, ladder=None)
+    faultinject.clear_degradation_log()
+    try:
+        with faultinject.inject("lowering_error:count=1"):
+            with pytest.raises(faultinject.InjectedFault):
+                plan.histograms(descs, valids, mode="fused")
+    finally:
+        faultinject.clear_degradation_log()
+
+
+def test_mode_resolution_chain(rng):
+    plan, descs, valids = _svm_plan(rng)
+    shape, dt = descs.shape, "float32"
+    assert plan.resolve_mode(shape, dt, "ref") == "ref"       # explicit wins
+    pinned = ClassifyPlan(centroids=plan.centroids, n_classes=plan.n_classes,
+                          head="svm", w=plan.w, b=plan.b, vc=VC, mode="ref")
+    assert pinned.resolve_mode(shape, dt) == "ref"            # plan.mode next
+    assert plan.resolve_mode(shape, dt) in CLASSIFY_MODES     # cache/fallback
+
+
+# -- plan validation + build_plan dispatch -----------------------------------
+
+def test_plan_validation(rng):
+    cents = jnp.zeros((8, 4), jnp.float32)
+    with pytest.raises(ValueError, match="needs w and b"):
+        ClassifyPlan(centroids=cents, n_classes=3, head="svm")
+    with pytest.raises(ValueError, match="needs a GbdtModel"):
+        ClassifyPlan(centroids=cents, n_classes=3, head="gbdt")
+    with pytest.raises(ValueError, match="unknown head"):
+        ClassifyPlan(centroids=cents, n_classes=3, head="forest",
+                     w=jnp.zeros((3, 8)), b=jnp.zeros(3))
+
+
+def test_build_plan_dispatch(rng):
+    splan, _, _ = _svm_plan(rng)
+    svm_model = pipeline.BowSvmModel(
+        centroids=splan.centroids, svm={"w": splan.w, "b": splan.b},
+        n_classes=splan.n_classes)
+    assert build_plan(svm_model).head == "svm"
+    gplan = _gbdt_plan(rng, splan)
+    gbdt_model = pipeline.BowGbdtModel(
+        centroids=splan.centroids, gbdt=gplan.gbdt,
+        n_classes=splan.n_classes)
+    assert build_plan(gbdt_model).head == "gbdt"
+    with pytest.raises(ValueError, match="neither"):
+        build_plan(object())
+
+
+def test_signature_is_shape_stable(rng):
+    plan, _, _ = _svm_plan(rng, k=250, d=32, c=6)
+    assert plan.signature == "classify:svm:k250d32c6"
+
+
+# -- pipeline routing --------------------------------------------------------
+
+def test_pipeline_predict_routes_through_plan(rng):
+    splan, descs, valids = _svm_plan(rng, b=3, n=16, d=128)
+    model = pipeline.BowSvmModel(
+        centroids=splan.centroids, svm={"w": splan.w, "b": splan.b},
+        n_classes=splan.n_classes)
+    imgs = jnp.asarray(rng.random((3, 32, 32)), jnp.float32)
+    timing = {}
+    pred = pipeline.predict(model, imgs, plan=splan, timing=timing)
+    assert pred.shape == (3,) and pred.dtype == jnp.int32
+    assert set(timing) == {"keypoint_detection", "feature_generation",
+                           "prediction"}

@@ -214,3 +214,17 @@ def test_pipeline_beats_chance(imgs):
     xte, yte = ImageStream().batch(30, split="test")
     acc = pipeline.accuracy(model, xte, yte, max_kp=8)
     assert acc > 0.15   # 10 classes, chance 0.1
+
+
+def test_kmeans_all_zero_weights_keeps_finite_centroids():
+    # regression: every cluster empty (all-zero weight vector) must keep
+    # the seeded init unchanged — no NaN/Inf from the empty-cluster mean
+    # (the counts > 0 guard in bow.kmeans); seeding itself must survive
+    # the degenerate weight distribution via the uniform fallback
+    key = jax.random.key(3)
+    desc = jax.random.normal(key, (64, 16))
+    cents = bow.kmeans(key, desc, jnp.zeros(64), k=8, iters=5)
+    assert bool(jnp.all(jnp.isfinite(cents)))
+    # zero updates: the centroids ARE the seeded descriptors
+    seeded = bow.kmeans(key, desc, jnp.zeros(64), k=8, iters=1)
+    np.testing.assert_array_equal(np.asarray(cents), np.asarray(seeded))

@@ -1,4 +1,7 @@
-"""Fused distance+argmin BoW kernel vs oracle."""
+"""Fused BoW classifier-tail kernels vs oracle: distance+argmin
+(`bow_assign`), single-launch quantize->histogram (`bow_quantize_hist`,
+bit-identical to `ref.bow_hist_ref`), and the edge shapes (empty/
+one-descriptor batches) the running-argmin init must survive."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -17,3 +20,65 @@ def test_bow_assign(rng, lmul, n, k):
     # fp tie-breaks can differ on equal distances: compare distances instead
     np.testing.assert_allclose(d2, rd2, rtol=1e-3, atol=1e-3)
     assert float((idx == ridx).mean()) > 0.995
+
+
+def test_bow_assign_batched_matches_flat(rng):
+    b, n, d, k = 3, 40, 64, 37
+    desc = jnp.asarray(rng.standard_normal((b, n, d)), jnp.float32)
+    cent = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+    vc = VectorConfig(lmul=1)
+    idx, d2 = ops.bow_assign(desc, cent, vc=vc)
+    fidx, fd2 = ops.bow_assign(desc.reshape(b * n, d), cent, vc=vc)
+    assert idx.shape == (b, n) and d2.shape == (b, n)
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  np.asarray(fidx.reshape(b, n)))
+    np.testing.assert_array_equal(np.asarray(d2),
+                                  np.asarray(fd2.reshape(b, n)))
+
+
+@pytest.mark.parametrize("n", [0, 1])
+def test_bow_assign_tiny_n(rng, n):
+    # n=0: no launch; n=1: a mostly-padding block — the +inf running-min
+    # init must let the first real centroid block win regardless
+    desc = jnp.asarray(rng.standard_normal((n, 32)), jnp.float32)
+    cent = jnp.asarray(rng.standard_normal((10, 32)), jnp.float32)
+    idx, d2 = ops.bow_assign(desc, cent, vc=VectorConfig(lmul=1))
+    assert idx.shape == (n,) and d2.shape == (n,)
+    if n:
+        ridx, _ = ref.bow_assign_ref(desc, cent)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+
+
+@pytest.mark.parametrize("lmul", [1, 2])
+@pytest.mark.parametrize("b,n,k", [(2, 32, 250), (3, 50, 129)])
+def test_quantize_hist_bit_identical(rng, lmul, b, n, k):
+    descs = jnp.asarray(rng.standard_normal((b, n, 64)), jnp.float32)
+    valids = jnp.asarray(rng.random((b, n)) < 0.7)
+    cents = jnp.asarray(rng.standard_normal((k, 64)), jnp.float32)
+    h = ops.bow_quantize_hist(descs, valids, cents,
+                              vc=VectorConfig(lmul=lmul))
+    hr = ref.bow_hist_ref(descs, valids, cents)
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(hr))
+
+
+def test_quantize_hist_unnormalized_counts(rng):
+    b, n, k = 2, 32, 40
+    descs = jnp.asarray(rng.standard_normal((b, n, 32)), jnp.float32)
+    valids = jnp.ones((b, n), bool)
+    cents = jnp.asarray(rng.standard_normal((k, 32)), jnp.float32)
+    h = ops.bow_quantize_hist(descs, valids, cents,
+                              vc=VectorConfig(lmul=1), normalize=False)
+    hr = ref.bow_hist_ref(descs, valids, cents, normalize=False)
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(hr))
+    # unnormalized: raw counts sum to the number of valid descriptors
+    np.testing.assert_array_equal(np.asarray(jnp.sum(h, axis=1)),
+                                  np.full(b, n, np.float32))
+
+
+def test_quantize_hist_empty_descriptor_set():
+    h = ops.bow_quantize_hist(jnp.zeros((2, 0, 16), jnp.float32),
+                              jnp.zeros((2, 0), bool),
+                              jnp.ones((5, 16), jnp.float32),
+                              vc=VectorConfig(lmul=1))
+    assert h.shape == (2, 5)
+    np.testing.assert_array_equal(np.asarray(h), np.zeros((2, 5)))

@@ -1,0 +1,191 @@
+"""PipelineConfig + the API redesign's freezes.
+
+Three things this file pins:
+
+  1. `PipelineConfig` semantics — frozen, hashable, ladder normalization,
+     head validation, `.replace()`.
+  2. The deprecation shims — every legacy kwarg (`mode=`, `ladder=`,
+     `n_octaves=`, `preprocess=`) still WORKS (same results as the
+     config path) and emits exactly ONE DeprecationWarning per call,
+     at `pipeline.extract_features`, `features.sift`, and the
+     `CvEngine` constructor.
+  3. The stable public surface of `repro.cv` / `repro.serve` — the
+     sorted-name freeze pattern from tests/test_stencil_package.py: a
+     missing name is an API break, a new name must be frozen here
+     deliberately.
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.cv as cv
+import repro.serve as serve
+from repro.cv import PipelineConfig, features, pipeline
+from repro.cv.config import DEPRECATED_KWARGS, resolve_config
+from repro.serve.cv_engine import CvEngine
+
+# ---------------------------------------------------------------------------
+# 1. PipelineConfig semantics
+# ---------------------------------------------------------------------------
+
+
+def test_config_is_frozen_and_hashable():
+    cfg = PipelineConfig(max_kp=16, mode="streaming")
+    with pytest.raises(Exception):
+        cfg.max_kp = 8
+    assert hash(cfg) == hash(PipelineConfig(max_kp=16, mode="streaming"))
+    assert cfg != PipelineConfig(max_kp=16)
+
+
+def test_config_normalizes_list_ladders():
+    cfg = PipelineConfig(ladder=["streaming", "ref"],
+                         classify_ladder=["fused", "ref"])
+    assert cfg.ladder == ("streaming", "ref")
+    assert cfg.classify_ladder == ("fused", "ref")
+    hash(cfg)          # tuples keep it hashable
+
+
+def test_config_rejects_unknown_head():
+    with pytest.raises(ValueError, match="unknown head"):
+        PipelineConfig(head="forest")
+
+
+def test_config_replace():
+    cfg = PipelineConfig()
+    assert cfg.replace(head="gbdt").head == "gbdt"
+    assert cfg.head == "svm"            # original untouched
+
+
+def test_resolve_config_rejects_non_config():
+    with pytest.raises(ValueError, match="expects a PipelineConfig"):
+        resolve_config({"max_kp": 8}, where="test")
+
+
+def test_resolve_config_explicit_kwargs_win():
+    cfg = PipelineConfig(max_kp=16, n_octaves=1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        out = resolve_config(cfg, where="test", n_octaves=3, max_kp=8)
+    assert (out.n_octaves, out.max_kp) == (3, 8)
+    assert (cfg.n_octaves, cfg.max_kp) == (1, 16)
+
+
+# ---------------------------------------------------------------------------
+# 2. deprecation shims: still work, warn exactly once per call
+# ---------------------------------------------------------------------------
+
+
+def _one_deprecation(record):
+    msgs = [w for w in record if issubclass(w.category, DeprecationWarning)]
+    assert len(msgs) == 1, [str(w.message) for w in msgs]
+    return str(msgs[0].message)
+
+
+def test_resolve_config_warns_once_aggregated():
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        resolve_config(None, where="test", mode="ref", n_octaves=2,
+                       preprocess=False)
+    msg = _one_deprecation(rec)
+    for k in ("mode", "n_octaves", "preprocess"):
+        assert k in msg
+    assert "ladder" not in msg          # only the kwargs actually passed
+
+
+def test_extract_features_shim_equivalent(rng):
+    imgs = jnp.asarray(rng.random((2, 32, 32)), jnp.float32)
+    cfg_out = pipeline.extract_features(imgs, PipelineConfig(max_kp=8,
+                                                             mode="ref"))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        kw_out = pipeline.extract_features(imgs, max_kp=8, mode="ref")
+    _one_deprecation(rec)
+    np.testing.assert_array_equal(np.asarray(cfg_out["desc"]),
+                                  np.asarray(kw_out["desc"]))
+
+
+def test_sift_shim_equivalent(rng):
+    img = jnp.asarray(rng.random((32, 32)), jnp.float32)
+    cfg_out = features.sift(img, PipelineConfig(max_kp=8, mode="ref"))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        kw_out = features.sift(img, max_kp=8, mode="ref")
+    _one_deprecation(rec)
+    np.testing.assert_array_equal(np.asarray(cfg_out["desc"]),
+                                  np.asarray(kw_out["desc"]))
+
+
+def test_sift_keeps_standalone_max_kp_default():
+    # historical standalone default (64) survives the config redesign;
+    # the pipeline's batch default (32) comes from PipelineConfig
+    img = jnp.zeros((32, 32), jnp.float32)
+    assert features.sift(img)["desc"].shape[0] == 64
+    assert features.sift(img, PipelineConfig())["desc"].shape[0] == 32
+
+
+def test_engine_ctor_shim_equivalent():
+    cfg_eng = CvEngine(config=PipelineConfig(max_kp=8, n_octaves=2))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        kw_eng = CvEngine(max_kp=8, n_octaves=2)
+    _one_deprecation(rec)
+    assert cfg_eng.config == kw_eng.config
+    assert cfg_eng.signature == kw_eng.signature
+
+
+def test_config_path_emits_no_warning(rng):
+    imgs = jnp.asarray(rng.random((1, 32, 32)), jnp.float32)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        pipeline.extract_features(imgs, PipelineConfig(max_kp=8))
+        CvEngine(config=PipelineConfig(max_kp=8))
+    assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
+
+
+def test_deprecated_kwargs_tuple_is_the_sprawl():
+    # the frozen list of cross-layer kwargs the redesign deprecated
+    assert DEPRECATED_KWARGS == ("mode", "ladder", "n_octaves", "preprocess")
+
+
+# ---------------------------------------------------------------------------
+# 3. API freeze (the sorted-name pattern from test_stencil_package.py)
+# ---------------------------------------------------------------------------
+
+CV_PUBLIC_API = (
+    "CLASSIFY_MODES", "ClassifyPlan", "PipelineConfig",
+    "bow", "build_plan", "classify", "config", "features", "gbdt",
+    "imgproc", "pipeline", "resolve_config", "svm",
+)
+
+SERVE_PUBLIC_API = (
+    "CvEngine", "Request", "Response",
+    "cv_engine", "health", "shard_dispatch",
+)
+
+
+def _freeze_check(module, frozen, label):
+    public = tuple(sorted(n for n in dir(module) if not n.startswith("_")))
+    missing = set(frozen) - set(public)
+    added = set(public) - set(frozen)
+    assert not missing, f"{label} dropped public names: {sorted(missing)}"
+    assert not added, (f"{label}: new public names {sorted(added)} — if "
+                       "deliberate, freeze them here")
+
+
+def test_cv_api_freeze():
+    _freeze_check(cv, CV_PUBLIC_API, "repro.cv")
+
+
+def test_serve_api_freeze():
+    _freeze_check(serve, SERVE_PUBLIC_API, "repro.serve")
+
+
+def test_frozen_entry_points_accept_config():
+    # the redesigned seam: every public entry point takes config=
+    import inspect
+    for fn in (pipeline.extract_features, pipeline.train, pipeline.predict,
+               pipeline.accuracy, features.sift):
+        assert "config" in inspect.signature(fn).parameters, fn.__name__
+    assert "config" in inspect.signature(CvEngine.__init__).parameters

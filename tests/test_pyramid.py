@@ -16,7 +16,7 @@ import pytest
 
 from repro.core import autotune
 from repro.core.vector import VectorConfig
-from repro.cv import features
+from repro.cv import PipelineConfig, features
 from repro.kernels import ref, stencil
 
 N_SCALES = 2            # keeps the ladder halo small enough for test images
@@ -194,7 +194,7 @@ def test_sift_pyramid_descriptor_path():
     through the pyramid: fixed-capacity output shapes, descriptors only on
     valid keypoints."""
     g = _gray(_rng(), (160, 152))
-    out = features.sift(g, max_kp=16, n_octaves=3)
+    out = features.sift(g, PipelineConfig(max_kp=16, n_octaves=3))
     assert out["desc"].shape == (16, 128)
     assert out["xy"].shape == (16, 2)
     d = np.asarray(out["desc"])

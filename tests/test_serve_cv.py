@@ -15,7 +15,7 @@ import numpy as np
 import pytest
 
 from repro.core import faultinject
-from repro.cv import features, pipeline
+from repro.cv import PipelineConfig, features, pipeline
 from repro.kernels import ref, stencil
 from repro.serve.cv_engine import CvEngine, Request
 
@@ -51,9 +51,9 @@ def _expected(eng, mode):
     + sanitized frames it actually processed."""
     outs = []
     for _, batch in eng.captured:
-        feats = pipeline.extract_features(jnp.asarray(batch),
-                                          max_kp=eng.max_kp, mode=mode,
-                                          validate=False)
+        feats = pipeline.extract_features(
+            jnp.asarray(batch), PipelineConfig(max_kp=eng.max_kp, mode=mode),
+            validate=False)
         outs.append((np.asarray(feats["desc"]), np.asarray(feats["valid"])))
     return outs
 

@@ -16,7 +16,7 @@ import pytest
 
 from conftest import run_subprocess
 from repro.core import faultinject
-from repro.cv import pipeline
+from repro.cv import PipelineConfig, pipeline
 from repro.serve.cv_engine import CvEngine
 from repro.serve.health import CircuitBreaker, DeviceHealthLedger
 from repro.serve.shard_dispatch import ShardDispatcher
@@ -274,8 +274,9 @@ def test_engine_routes_through_dispatcher_and_matches_local():
     assert all(r.device in ("v0", "v1") for r in res)
     assert eng.stats["sharded_batches"] == 1
     (_, batch), = eng.captured
-    feats = pipeline.extract_features(jnp.asarray(batch), max_kp=4,
-                                      mode="streaming", validate=False)
+    feats = pipeline.extract_features(
+        jnp.asarray(batch), PipelineConfig(max_kp=4, mode="streaming"),
+        validate=False)
     for k, r in enumerate(res):
         np.testing.assert_array_equal(r.desc, np.asarray(feats["desc"])[k])
 
